@@ -1,0 +1,19 @@
+"""Paper Tables 6 & 7 analogue: accuracy with/without infix processing,
+plus per-root accuracy for the highest-frequency roots."""
+from __future__ import annotations
+
+from repro.core import accuracy
+
+
+def main(n_words: int = 12000):
+    res = accuracy.table6(n_words=n_words, seed=0)
+    w, wo = res["with_infix"], res["without_infix"]
+    print(f"table6_with_infix,{0:.3f},word_acc={w.accuracy:.3f}_root_recall={w.root_recall:.3f}")
+    print(f"table6_without_infix,{0:.3f},word_acc={wo.accuracy:.3f}_root_recall={wo.root_recall:.3f}")
+    for row in accuracy.table7(n_words=n_words, seed=0, top_k=10):
+        print(f"table7_{row['root']},{0:.3f},"
+              f"actual={row['actual']}_with={row['with_infix']}_without={row['without_infix']}")
+
+
+if __name__ == "__main__":
+    main()

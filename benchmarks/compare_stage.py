@@ -1,0 +1,50 @@
+"""Paper §6.4 complexity discussion, realised: the Compare stage as
+(a) linear comparator-bank scan (the paper's hardware, our Pallas kernel
+path / dense backend) vs (b) the paper's proposed O(log R) tree search
+(sorted binary search), across dictionary sizes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stemmer
+
+
+def match_unpacked(stems, roots):
+    """Character-wise comparator bank — the paper's FPGA formulation
+    before our 24-bit key packing: 4 int compares + AND-reduce per pair."""
+    return (stems[:, None, :] == roots[None, :, :]).all(-1).any(-1)
+
+
+def run(n_keys: int = 16384, dict_sizes=(512, 2048, 8192, 32768)):
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 2**24, n_keys).astype(np.int32))
+    stems = jnp.asarray(rng.integers(0, 64, (n_keys, 4)).astype(np.int32))
+    rows = []
+    for r in dict_sizes:
+        dk = jnp.asarray(np.sort(rng.integers(0, 2**24, r)).astype(np.int32))
+        droots = jnp.asarray(rng.integers(0, 64, (r, 4)).astype(np.int32))
+        cases = [
+            ("unpacked", lambda: jax.jit(match_unpacked)(stems, droots)),
+            ("dense", lambda: jax.jit(stemmer.match_dense)(keys, dk)),
+            ("sorted", lambda: jax.jit(stemmer.match_sorted)(keys, dk)),
+        ]
+        for name, call in cases:
+            jax.block_until_ready(call())
+            t0 = time.perf_counter()
+            jax.block_until_ready(call())
+            dt = time.perf_counter() - t0
+            rows.append((name, r, n_keys / dt))
+    return rows
+
+
+def main():
+    for name, r, kps in run():
+        print(f"compare_{name}_R{r},{1e6 / kps:.4f},{kps/1e6:.2f}Mkeys_s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""§Roofline: assemble the per-(arch × shape) roofline table from the
+dry-run JSON records (benchmarks/results/dryrun_*.json, single-pod)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def load_records(mesh: str = "16x16") -> list[dict]:
+    recs = []
+    for f in sorted(RESULTS.glob(f"dryrun_*_{mesh}.json")):
+        r = json.loads(f.read_text())
+        if r.get("roofline"):
+            recs.append(r)
+    return recs
+
+
+def table(recs=None) -> str:
+    recs = recs or load_records()
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'bound':>8s} {'useful%':>8s} {'HBM GB/dev':>10s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        rf = r["roofline"]
+        mem_gb = r["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {rf['compute_s']:10.3e} "
+            f"{rf['memory_s']:10.3e} {rf['collective_s']:10.3e} "
+            f"{rf['bottleneck']:>8s} {100 * r.get('useful_flops_frac', 0):8.1f} "
+            f"{mem_gb:10.1f}")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    for r in recs:
+        rf = r["roofline"]
+        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        # roofline fraction: useful-compute time / dominant term
+        frac = (r["model_flops"] / (r["chips"] * 197e12)) / dom if dom else 0
+        print(f"roofline_{r['arch']}_{r['shape']},{dom * 1e6:.1f},"
+              f"bound={rf['bottleneck']}_frac={frac:.3f}")
+
+
+if __name__ == "__main__":
+    print(table())
+    main()

@@ -1,0 +1,40 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines:
+  throughput_*   Fig 16  (software vs non-pipelined vs pipelined Wps)
+  scaling_*      Fig 17  (throughput vs word count)
+  table6_*       Table 6 (accuracy ± infix processing)
+  table7_*       Table 7 (per-root accuracy, top-frequency roots)
+  compare_*      §6.4    (Compare-stage: linear vs sorted search)
+  roofline_*     §Roofline (from dry-run records, if present)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import accuracy_bench, compare_stage, roofline, scaling, throughput
+
+    sections = [
+        ("throughput", throughput.main),
+        ("scaling", scaling.main),
+        ("accuracy", accuracy_bench.main),
+        ("compare_stage", compare_stage.main),
+        ("roofline", roofline.main),
+    ]
+    failed = 0
+    for name, fn in sections:
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            print(f"{name}_FAILED,0,see_stderr", flush=True)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

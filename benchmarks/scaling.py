@@ -1,0 +1,37 @@
+"""Paper Fig 17 analogue: throughput vs number of input words.
+
+The pipelined processor's advantage grows with word count as the 5-cycle
+fill amortises; here the analogue is jit/dispatch amortisation + steady
+microbatch streaming."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import corpus, stemmer
+
+
+def run(sizes=(512, 2048, 8192, 32768), backend="sorted"):
+    d = corpus.build_dictionary()
+    da = stemmer.RootDictArrays.from_rootdict(d)
+    rows = []
+    for n in sizes:
+        words, _, _ = corpus.build_corpus(n_words=n, seed=1)
+        enc = jnp.asarray(corpus.encode_corpus(words))
+        jax.block_until_ready(stemmer.stem_batch(enc, da, backend=backend))
+        t0 = time.perf_counter()
+        jax.block_until_ready(stemmer.stem_batch(enc, da, backend=backend))
+        dt = time.perf_counter() - t0
+        rows.append((n, n / dt))
+    return rows
+
+
+def main():
+    for n, wps in run():
+        print(f"scaling_n{n},{1e6 / wps:.3f},{wps:.1f}Wps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""The paper's pipelined processor across devices: the 5-stage stemmer on
+a 5-device pipeline via shard_map + ppermute (dist/pipeline.py).
+
+Needs >= 5 local devices; run with forced host devices:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=5 \
+      PYTHONPATH=src python examples/pipeline_stemmer.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=5 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import alphabet as ab  # noqa: E402
+from repro.core import corpus, stemmer  # noqa: E402
+from repro.dist import pipeline  # noqa: E402
+
+
+def main():
+    assert len(jax.devices()) >= 5, "need 5 devices for the 5-stage pipeline"
+    mesh = jax.make_mesh((5,), ("stage",))
+    roots = corpus.build_dictionary(n_tri=800, n_quad=100)
+    da = stemmer.RootDictArrays.from_rootdict(roots)
+
+    words, truths, _ = corpus.build_corpus(n_words=64, seed=3)
+    enc = jnp.asarray(corpus.encode_corpus(words))
+    m, mb = 8, 8  # 8 microbatches of 8 words
+    bundle = {
+        "words": enc.reshape(m, mb, ab.MAXLEN),
+        "keys": jnp.zeros((m, mb, 32), jnp.int32),
+        "valid": jnp.zeros((m, mb, 32), jnp.int32),
+        "root": jnp.zeros((m, mb, 4), jnp.int32),
+        "source": jnp.zeros((m, mb), jnp.int32),
+    }
+    stage_fns = pipeline.stemmer_stage_fns(da)
+    out = pipeline.pipeline_map(stage_fns, bundle, mesh, axis="stage")
+
+    roots_flat = np.asarray(out["root"]).reshape(-1, 4)
+    ok = 0
+    for i, w in enumerate(words[:8]):
+        root = ab.decode_word([int(c) for c in roots_flat[i]])
+        print(f"{w:>16s} -> {root}")
+    # verify against the single-device batch path
+    ref_roots, ref_src = stemmer.stem_batch(enc, da)
+    np.testing.assert_array_equal(roots_flat, np.asarray(ref_roots))
+    np.testing.assert_array_equal(
+        np.asarray(out["source"]).reshape(-1), np.asarray(ref_src))
+    print("pipeline output == single-device batch output ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""repro: Parallel Hardware for Faster Morphological Analysis, as a multi-pod JAX framework (see README.md)."""

@@ -1,0 +1,10 @@
+"""Core: the paper's verb-root-extraction stemmer (see DESIGN.md §1-2).
+
+Modules:
+  alphabet   — codepoint tables, normalisation, dense 6-bit packing
+  pyref      — pure-Python oracle (executable spec)
+  stemmer    — vectorised JAX implementation (5 stages, 3 match backends)
+  conjugator — verb-form generator (corpus synthesis)
+  corpus     — root dictionaries + synthetic Zipf corpus
+  accuracy   — Tables 6/7 analogue harness
+"""

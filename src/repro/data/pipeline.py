@@ -1,0 +1,95 @@
+"""Data pipeline: synthetic LM streams + the paper's morphological
+analyzer as a first-class preprocessing operator.
+
+`morph_lm_batches` is the integration point (DESIGN.md §4): a stream of
+Arabic verb forms is encoded to character tokens while the batched JAX
+stemmer produces per-word root ids — usable as auxiliary labels
+(root-prediction heads) or for root-aware vocabulary reduction. The
+stemmer runs at MWps throughput (see benchmarks/throughput.py), so it
+never bottlenecks the input pipeline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import alphabet as ab
+from repro.core import corpus as corpus_mod
+from repro.core import stemmer
+
+
+def synthetic_lm_batches(vocab: int, batch: int, seq: int, seed: int = 0,
+                         effective_vocab: int | None = None, branching: int = 4):
+    """Endless synthetic token batches (markov chain, learnable signal).
+
+    effective_vocab restricts the emitted ids (< vocab) so small smoke
+    models can visibly learn within tens of steps.
+    """
+    rng = np.random.default_rng(seed)
+    ev = min(effective_vocab or vocab, vocab)
+    # fixed bigram table so the LM example has signal to learn
+    trans = rng.integers(0, ev, size=(ev, branching)).astype(np.int32)
+    while True:
+        toks = np.empty((batch, seq + 1), np.int32)
+        toks[:, 0] = rng.integers(0, ev, size=batch)
+        for t in range(seq):
+            choice = rng.integers(0, branching, size=batch)
+            toks[:, t + 1] = trans[toks[:, t], choice]
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:].copy()}
+
+
+class MorphPreprocessor:
+    """Batched root extraction as a pipeline operator."""
+
+    def __init__(self, n_tri=2000, n_quad=200, backend="sorted", seed=0):
+        self.rootdict = corpus_mod.build_dictionary(n_tri, n_quad, seed)
+        self.arrays = stemmer.RootDictArrays.from_rootdict(self.rootdict)
+        self.backend = backend
+        # root id table: packed key -> dense id
+        keys = sorted(
+            {ab.pack_key(r) for r in self.rootdict.tri}
+            | {ab.pack_key(r) for r in self.rootdict.quad}
+            | {ab.pack_key(r) for r in self.rootdict.bi})
+        self._key_to_id = {k: i + 1 for i, k in enumerate(keys)}  # 0 = none
+        self.n_roots = len(keys) + 1
+
+    def __call__(self, words: list[str]):
+        """words -> (char_tokens int32[B,16], root_ids int32[B])."""
+        enc = corpus_mod.encode_corpus(words)
+        roots, _src = stemmer.stem_batch(enc, self.arrays, backend=self.backend)
+        roots = np.asarray(roots)
+        keys = ((roots[:, 0] * 64 + roots[:, 1]) * 64 + roots[:, 2]) * 64 + roots[:, 3]
+        ids = np.array([self._key_to_id.get(int(k), 0) for k in keys], np.int32)
+        return enc, ids
+
+
+def morph_lm_batches(batch_words: int, seq: int, seed: int = 0,
+                     preproc: MorphPreprocessor | None = None):
+    """Arabic char-level LM stream with root-id auxiliary labels.
+
+    Words are conjugated verb forms (corpus.build_corpus); tokens are
+    6-bit char codes (vocab = alphabet.N_CODES + separator); labels shift
+    by one; root ids accompany each word for auxiliary supervision.
+    """
+    pre = preproc or MorphPreprocessor(seed=seed)
+    rng = np.random.default_rng(seed)
+    sep = ab.N_CODES  # word separator token
+    vocab = ab.N_CODES + 1
+    epoch = 0
+    while True:
+        words, _truths, _ = corpus_mod.build_corpus(
+            n_words=batch_words, seed=seed + epoch)
+        enc, root_ids = pre(words)
+        stream = []
+        for row in enc:
+            stream.extend(int(c) for c in row if c)
+            stream.append(sep)
+        toks = np.asarray(stream[: (len(stream) // (seq + 1)) * (seq + 1)],
+                          np.int32).reshape(-1, seq + 1)
+        for i in range(toks.shape[0]):
+            yield {
+                "tokens": toks[i : i + 1, :-1],
+                "labels": toks[i : i + 1, 1:].copy(),
+                "vocab": vocab,
+                "root_ids": root_ids,
+            }
+        epoch += 1

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused causal attention (FlashAttention-style).
+
+TPU adaptation of the IO-aware attention algorithm [arXiv:2205.14135]:
+instead of SRAM-per-SM tiles, q/k/v blocks are staged HBM->VMEM by
+BlockSpec; the MXU consumes (block_q x head_dim) @ (head_dim x block_k)
+tiles and the online-softmax running stats (m, l) live in VMEM scratch
+across the k-grid. Causality is exploited structurally: k-blocks strictly
+above the diagonal are skipped via pl.when (their contribution is zero),
+halving compute for long sequences.
+
+Grid: (batch*heads, q_blocks, k_blocks) with k innermost so the output
+tile revisits accumulate in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, block_q, block_k, scale, causal):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:  # skip blocks strictly above the diagonal
+        run = ki * block_k <= qi * block_q + block_q - 1
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0].astype(jnp.float32)            # [bk, d]
+        s = (q @ k.T) * scale                       # [bq, bk]
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG)
+
+        m_prev = m_ref[...]                          # [bq, 1]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)              # [bq, 1]
+        l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q/k/v: [B, H, T, D] (same T; GQA expansion happens in the caller).
+
+    Returns [B, H, T, D] = softmax(qk^T * D^-0.5 [+causal]) v.
+    """
+    b, h, t, d = q.shape
+    assert k.shape == v.shape == (b, h, t, d)
+    block_q = min(block_q, t)
+    block_k = min(block_k, t)
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+    scale = d ** -0.5
+
+    qf = q.reshape(b * h, t, d)
+    kf = k.reshape(b * h, t, d)
+    vf = v.reshape(b * h, t, d)
+    grid = (b * h, t // block_q, t // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, scale=scale,
+        causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, d)

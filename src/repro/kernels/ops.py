@@ -1,0 +1,71 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU hosts (this container) kernels run with ``interpret=True`` — the
+kernel body executes in Python with numpy semantics, validating the exact
+code that pallas_call lowers for TPU. On TPU backends interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pyref
+from repro.kernels import ref as kref
+from repro.kernels import stem_datapath as sdp
+from repro.kernels import stem_match as sm
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def dict_match(keys: jnp.ndarray, dict_keys: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Membership of packed stem keys in a packed root dictionary."""
+    kw.setdefault("interpret", _interpret_default())
+    return sm.dict_match_pallas(keys, dict_keys, **kw)
+
+
+def stem_candidates(words: jnp.ndarray, **kw):
+    """Fused stages 1-4: words[B,16] -> (keys[B,32], valid[B,32])."""
+    kw.setdefault("interpret", _interpret_default())
+    return sdp.stem_datapath_pallas(words, **kw)
+
+
+def unpack_keys(keys: jnp.ndarray) -> jnp.ndarray:
+    """int32[...] packed keys -> int32[..., 4] char codes."""
+    return jnp.stack(
+        [(keys >> 18) & 63, (keys >> 12) & 63, (keys >> 6) & 63, keys & 63],
+        axis=-1,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("infix", "interpret"))
+def extract_roots_fused(words, roots, *, infix: bool = True, interpret: bool | None = None):
+    """Full kernel pipeline: datapath kernel -> match kernels -> priority
+    select. Same contract as repro.core.stemmer.extract_roots.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    keys, valid = sdp.stem_datapath_pallas(words, interpret=interpret)
+    b = words.shape[0]
+
+    n_groups = 5 if infix else 2
+    dicts = [roots.tri, roots.quad, roots.tri, roots.tri, roots.bi][:n_groups]
+    hits = []
+    for g, dk in enumerate(dicts):
+        sl = keys[:, g * 6 : (g + 1) * 6].reshape(-1)
+        hit = sm.dict_match_pallas(sl, dk, interpret=interpret).reshape(b, 6)
+        hits.append(hit & (valid[:, g * 6 : (g + 1) * 6] > 0))
+    all_hits = jnp.concatenate(hits, axis=1)
+
+    first = jnp.argmax(all_hits, axis=1)
+    found = all_hits.any(axis=1)
+    chosen_keys = jnp.take_along_axis(keys[:, : n_groups * 6], first[:, None], 1)[:, 0]
+    root = jnp.where(found[:, None], unpack_keys(chosen_keys), 0)
+    tags = jnp.asarray(
+        [t for t in kref.GROUP_TAGS[:n_groups] for _ in range(6)], jnp.int32
+    )
+    source = jnp.where(found, tags[first], pyref.SRC_NONE)
+    return root, source

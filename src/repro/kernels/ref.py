@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle reuses the core (already pyref-validated) JAX implementation so
+kernel tests close the chain: pyref (python spec) == core jnp == Pallas.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pyref, stemmer
+
+
+def dict_match_ref(keys: jnp.ndarray, dict_keys: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for stem_match.dict_match_pallas."""
+    return stemmer.match_dense(keys, dict_keys)
+
+
+def stem_datapath_ref(words: jnp.ndarray):
+    """Oracle for stem_datapath.stem_datapath_pallas: (keys, valid) [B,32]."""
+    from repro.core import alphabet as ab
+
+    tri, tri_valid, quad, quad_valid = stemmer.generate_stems(words)
+    zero = jnp.zeros_like(tri[..., 0])
+
+    restored = tri.at[..., 1].set(
+        jnp.where(tri[..., 1] == ab.ALEF, ab.WAW, tri[..., 1])
+    )
+    r_valid = tri_valid & (tri[..., 1] == ab.ALEF)
+
+    infix_codes = jnp.asarray(ab.INFIX_CODES)
+    is_inf_q = (quad[..., 1:2] == infix_codes).any(-1)
+    deinf_q = jnp.stack([quad[..., 0], quad[..., 2], quad[..., 3], zero], -1)
+    is_inf_t = (tri[..., 1:2] == infix_codes).any(-1)
+    deinf_t = jnp.stack([tri[..., 0], tri[..., 2], zero, zero], -1)
+
+    keys = jnp.concatenate(
+        [
+            stemmer.pack_keys(tri),
+            stemmer.pack_keys(quad),
+            stemmer.pack_keys(restored),
+            stemmer.pack_keys(deinf_q),
+            stemmer.pack_keys(deinf_t),
+            jnp.zeros((words.shape[0], 2), jnp.int32),
+        ],
+        axis=1,
+    )
+    valid = jnp.concatenate(
+        [
+            tri_valid,
+            quad_valid,
+            r_valid,
+            quad_valid & is_inf_q,
+            tri_valid & is_inf_t,
+            jnp.zeros((words.shape[0], 2), bool),
+        ],
+        axis=1,
+    ).astype(jnp.int32)
+    return keys, valid
+
+
+# re-export: candidate slot -> source tag, shared with ops.extract_roots
+GROUP_TAGS = [
+    pyref.SRC_TRI,
+    pyref.SRC_QUAD,
+    pyref.SRC_RESTORED,
+    pyref.SRC_DEINFIX_TRI,
+    pyref.SRC_DEINFIX_BI,
+]
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Oracle for flash_attention.flash_attention: plain softmax attention.
+
+    q/k/v [B,H,T,D] -> [B,H,T,D], fp32 internals.
+    """
+    b, h, t, d = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: fused stemmer datapath (stages 1-4 + key packing).
+
+The FPGA Datapath (paper Fig 10) separates five functional stages with
+register arrays; values never leave the chip between stages. The TPU
+analogue keeps a word tile resident in VMEM and runs all character-level
+stages back-to-back — check, produce (masking networks), generate
+(truncation grid), filter, infix transforms, key packing — emitting the 30
+packed candidate keys + validity flags per word. Stage 5 (Compare) is the
+separate ``stem_match`` kernel, mirroring the paper's split between the
+truncation logic and the comparator banks.
+
+The masking networks are implemented as unrolled AND chains over the 16
+character slots — a literal transcription of the FPGA combinational
+network (and TPU-safe: no dynamic control flow, pure VPU ops).
+
+Candidate layout along the 32-wide output (30 used, 2 zero pads), matching
+repro.core.stemmer group order:
+  [ 0: 6)  trilateral     (dict: tri)
+  [ 6:12)  quadrilateral  (dict: quad)
+  [12:18)  restored ا→و   (dict: tri)
+  [18:24)  remove-infix quad→tri (dict: tri)
+  [24:30)  remove-infix tri→bi   (dict: bi)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import alphabet as ab
+
+N_GROUPS = 5
+N_CAND = 6
+N_OUT = 32  # 30 candidates padded to a power-of-two minor dim
+
+
+def _member(x, codes) -> jnp.ndarray:
+    """Unrolled membership test against a static code list (VPU OR-chain)."""
+    hit = jnp.zeros(x.shape, dtype=bool)
+    for c in codes:
+        hit |= x == int(c)
+    return hit
+
+
+def _datapath_kernel(words_ref, keys_ref, valid_ref):
+    w = words_ref[...]  # (bb, 16) int32
+    bb = w.shape[0]
+    in_word = w != 0
+    n = in_word.astype(jnp.int32).sum(axis=1, keepdims=True)  # (bb, 1)
+
+    # ---- stage 1+2: prefix run (unrolled AND chain + ي terminator) -------
+    pp_cols = []
+    run = jnp.ones((bb,), dtype=bool)
+    seen_yeh = jnp.zeros((bb,), dtype=bool)
+    for i in range(5):
+        ci = w[:, i]
+        run = run & _member(ci, ab.PREFIX_CODES) & ~seen_yeh
+        pp_cols.append(run)
+        seen_yeh = seen_yeh | (ci == int(ab.YEH))
+    # pp[i] == chars 0..i form a valid prefix run
+
+    # ---- stage 1+2: suffix run anchored at the word end ------------------
+    is_suf = _member(w, ab.SUFFIX_CODES) | ~in_word
+    ps_cols = [None] * ab.MAXLEN
+    run = jnp.ones((bb,), dtype=bool)
+    for j in range(ab.MAXLEN - 1, -1, -1):
+        run = run & is_suf[:, j]
+        ps_cols[j] = run
+    # valid suffix start s in 0..16: s == n (no suffix) or run holds at s
+    nn = n[:, 0]
+
+    def valid_s(s: int) -> jnp.ndarray:
+        if s >= ab.MAXLEN:
+            return nn == s
+        return (nn == s) | ((s < nn) & ps_cols[s] & in_word[:, s])
+
+    # ---- stages 3+4: truncation grid + filter + pack ---------------------
+    def pack(c0, c1, c2, c3):
+        return ((c0 * 64 + c1) * 64 + c2) * 64 + c3
+
+    zero = jnp.zeros((bb,), jnp.int32)
+    tri_k, tri_v, quad_k, quad_v = [], [], [], []
+    rest_k, rest_v, dq_k, dq_v, dt_k, dt_v = [], [], [], [], [], []
+    for p in range(-1, 5):
+        start = p + 1
+        p_ok = jnp.ones((bb,), bool) if p == -1 else pp_cols[p]
+        c = [w[:, start + k] for k in range(4)]
+
+        tv = p_ok & valid_s(p + 4)
+        tri_k.append(pack(c[0], c[1], c[2], zero))
+        tri_v.append(tv)
+        qv = p_ok & valid_s(p + 5)
+        quad_k.append(pack(c[0], c[1], c[2], c[3]))
+        quad_v.append(qv)
+
+        # infix transforms (paper Figs 18-19) fused into the same pass
+        rest_k.append(pack(c[0], jnp.full_like(c[1], int(ab.WAW)), c[2], zero))
+        rest_v.append(tv & (c[1] == int(ab.ALEF)))
+        is_inf = _member(c[1], ab.INFIX_CODES)
+        dq_k.append(pack(c[0], c[2], c[3], zero))
+        dq_v.append(qv & is_inf)
+        dt_k.append(pack(c[0], c[2], zero, zero))
+        dt_v.append(tv & is_inf)
+
+    key_cols = tri_k + quad_k + rest_k + dq_k + dt_k + [zero, zero]
+    val_cols = tri_v + quad_v + rest_v + dq_v + dt_v
+    val_cols = [v.astype(jnp.int32) for v in val_cols] + [zero, zero]
+    keys_ref[...] = jnp.stack(key_cols, axis=1)
+    valid_ref[...] = jnp.stack(val_cols, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def stem_datapath_pallas(
+    words: jnp.ndarray, *, block_b: int = 256, interpret: bool = False
+):
+    """words int32[B,16] -> (keys int32[B,32], valid int32[B,32])."""
+    b = words.shape[0]
+    pad = (-b) % block_b
+    wp = jnp.pad(words, ((0, pad), (0, 0)))
+    grid = (wp.shape[0] // block_b,)
+    keys, valid = pl.pallas_call(
+        _datapath_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, ab.MAXLEN), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_b, N_OUT), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, N_OUT), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((wp.shape[0], N_OUT), jnp.int32),
+            jax.ShapeDtypeStruct((wp.shape[0], N_OUT), jnp.int32),
+        ],
+        interpret=interpret,
+    )(wp)
+    return keys[:b], valid[:b]

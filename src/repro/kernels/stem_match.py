@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: tiled dictionary match (the paper's Compare stage).
+
+The FPGA datapath instantiates banks of ``stem3/4_Comparator`` units that
+compare candidate stems against stored roots in parallel. On TPU the root
+dictionary lives in HBM and is streamed tile-by-tile through VMEM while a
+tile of packed 24-bit candidate keys stays resident; each grid step performs
+an all-pairs equality compare on the VPU and ORs the row-reduction into the
+output tile.
+
+Layout: both keys and dictionary are reshaped to (rows, 128) so the minor
+dimension matches the VPU lane width; a (block_n x 128) key tile against a
+(block_r x 128) dictionary tile compares (block_n*128) x (block_r*128)
+pairs per step — the TPU analogue of the comparator bank, with the bank
+"size" set by BlockSpec rather than LUT count.
+
+Padding: keys are padded with -1 and the dictionary with -2, so padding
+never produces a match.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+KEY_PAD = -1
+DICT_PAD = -2
+
+
+def _match_kernel(keys_ref, dict_ref, out_ref):
+    """Grid (n_tiles, r_tiles); r (minor) accumulates OR into out_ref."""
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]          # (bn, LANE) int32
+    dic = dict_ref[...]           # (br, LANE) int32
+    bn, _ = keys.shape
+    # all-pairs compare: (bn*LANE, 1) vs (1, br*LANE)
+    k_flat = keys.reshape(bn * LANE, 1)
+    d_flat = dic.reshape(1, -1)
+    hit = (k_flat == d_flat).any(axis=1).reshape(bn, LANE)
+    out_ref[...] |= hit.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_r", "interpret"))
+def dict_match_pallas(
+    keys: jnp.ndarray,
+    dict_keys: jnp.ndarray,
+    *,
+    block_n: int = 2,
+    block_r: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """keys int32[N], dict_keys int32[R] -> bool[N] membership flags."""
+    n = keys.shape[0]
+    r = dict_keys.shape[0]
+
+    n_pad = (-n) % (block_n * LANE)
+    r_pad = (-r) % (block_r * LANE)
+    keys_p = jnp.pad(keys, (0, n_pad), constant_values=KEY_PAD).reshape(-1, LANE)
+    dict_p = jnp.pad(dict_keys, (0, r_pad), constant_values=DICT_PAD).reshape(-1, LANE)
+
+    n_tiles = keys_p.shape[0] // block_n
+    r_tiles = dict_p.shape[0] // block_r
+
+    out = pl.pallas_call(
+        _match_kernel,
+        grid=(n_tiles, r_tiles),
+        in_specs=[
+            pl.BlockSpec((block_n, LANE), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_r, LANE), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, LANE), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(keys_p.shape, jnp.int32),
+        interpret=interpret,
+    )(keys_p, dict_p)
+    return out.reshape(-1)[:n].astype(bool)

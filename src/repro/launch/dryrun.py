@@ -1,0 +1,298 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch × shape × mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16×16 single-pod, 2×16×16 multi-pod),
+  2. constructs abstract, sharded inputs (ShapeDtypeStructs — no alloc),
+  3. lowers + compiles the step (train_step / prefill / decode),
+  4. records memory_analysis, cost_analysis, and collective-byte stats
+     parsed from the optimized HLO into benchmarks/results/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.configs import SHAPES, RunConfig, shapes_for  # noqa: E402
+from repro.dist import sharding  # noqa: E402
+from repro.launch import hlo_analysis, input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as model_mod  # noqa: E402
+from repro.models import params as pm  # noqa: E402
+from repro.train import optimizer, train_step as ts  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+def _moments_dtype(cfg):
+    # bf16 moments keep the 235B MoE optimizer inside v5e HBM (DESIGN.md)
+    return jnp.bfloat16 if pm.count_params(model_mod.model_spec(cfg)) > 1e11 \
+        else jnp.float32
+
+
+def active_params(cfg) -> int:
+    """Parameters touched per token (MoE counts top_k+shared experts)."""
+    spec = model_mod.model_spec(cfg)
+    total = pm.count_params(spec)
+    if not cfg.is_moe:
+        return total
+    per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+    n_moe_layers = cfg.n_layers - cfg.first_dense
+    routed_total = cfg.n_experts * per_expert * n_moe_layers
+    routed_active = cfg.top_k * per_expert * n_moe_layers
+    return total - routed_total + routed_active
+
+
+def _param_dtype(cfg):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               profile: str = "default"):
+    """Returns (lowered, compiled, meta) for one cell."""
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    run = RunConfig(model=cfg, shape=shape, profile=profile)
+    spec = model_mod.model_spec(cfg)
+    aparams = sharding.shard_abstract(spec, mesh, _param_dtype(cfg), profile)
+
+    if shape.kind == "train":
+        step = ts.make_train_step(cfg, run, mesh)
+        aopt = optimizer.abstract_state(aparams, _moments_dtype(cfg))
+        abatch = input_specs.batch_specs(cfg, shape, mesh, profile)
+        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+            aparams, aopt, abatch)
+        tokens = shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        step = ts.make_prefill_step(cfg, mesh, profile)
+        args = input_specs.prefill_specs(cfg, shape, mesh, profile)
+        kwargs = {}
+        if "vision_embeds" in args:
+            kwargs["vision_embeds"] = args.pop("vision_embeds")
+        lowered = jax.jit(step).lower(aparams, args["tokens"], **kwargs)
+        tokens = shape.global_batch * shape.seq_len
+    else:  # decode
+        step = ts.make_decode_step(cfg, mesh, profile)
+        args = input_specs.decode_specs(cfg, shape, mesh, profile)
+        lowered = jax.jit(step, donate_argnums=(2,)).lower(
+            aparams, args["tokens"], args["caches"], args["pos"])
+        tokens = shape.global_batch  # one token per sequence per step
+
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "profile": profile,
+        "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "tokens_per_step": tokens,
+        "params_total": pm.count_params(spec),
+        "params_active": active_params(cfg),
+    }
+    return lowered, meta
+
+
+def analysis_variant(arch: str, n_units: int, param_dtype: str | None = None):
+    """Reduced-depth, fully-unrolled config for exact cost accounting.
+
+    Returns (cfg, unit_multiplier): total = A + (B - A) * unit_multiplier
+    where A/B are the n_units=1/2 measurements (see scan_utils docstring).
+    """
+    import dataclasses
+
+    cfg = configs.get_config(arch)
+    if param_dtype:
+        cfg = dataclasses.replace(cfg, param_dtype=param_dtype)
+    if cfg.n_cross_layers:  # unit = one (cross + group_self·self) group
+        var = dataclasses.replace(
+            cfg, n_cross_layers=n_units, n_layers=n_units * cfg.group_self,
+            unroll_scans=True)
+        return var, cfg.n_cross_layers - 1
+    if cfg.first_dense:     # unit = one MoE layer (dense layer in the base)
+        var = dataclasses.replace(
+            cfg, n_layers=cfg.first_dense + (n_units - 1), unroll_scans=True)
+        return var, cfg.n_layers - cfg.first_dense
+    var = dataclasses.replace(cfg, n_layers=n_units, unroll_scans=True)
+    return var, cfg.n_layers - 1
+
+
+def _cost_of(cfg, shape_name: str, multi_pod: bool, profile: str = "default"):
+    """Compile one (possibly analysis-variant) cell; return per-dev costs."""
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    run = RunConfig(model=cfg, shape=shape, profile=profile)
+    spec = model_mod.model_spec(cfg)
+    aparams = sharding.shard_abstract(spec, mesh, _param_dtype(cfg), profile)
+    if shape.kind == "train":
+        step = ts.make_train_step(cfg, run, mesh)
+        aopt = optimizer.abstract_state(aparams, _moments_dtype(cfg))
+        abatch = input_specs.batch_specs(cfg, shape, mesh, profile)
+        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+            aparams, aopt, abatch)
+    elif shape.kind == "prefill":
+        step = ts.make_prefill_step(cfg, mesh, profile)
+        args = input_specs.prefill_specs(cfg, shape, mesh, profile)
+        kwargs = {}
+        if "vision_embeds" in args:
+            kwargs["vision_embeds"] = args.pop("vision_embeds")
+        lowered = jax.jit(step).lower(aparams, args["tokens"], **kwargs)
+    else:
+        step = ts.make_decode_step(cfg, mesh, profile)
+        args = input_specs.decode_specs(cfg, shape, mesh, profile)
+        lowered = jax.jit(step, donate_argnums=(2,)).lower(
+            aparams, args["tokens"], args["caches"], args["pos"])
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    coll = hlo_analysis.collective_bytes(text)
+    mem = compiled.memory_analysis()
+    fused = hlo_analysis.hbm_traffic_model(
+        text,
+        arg_bytes=getattr(mem, "argument_size_in_bytes", 0),
+        out_bytes=getattr(mem, "output_size_in_bytes", 0))
+    return {
+        "flops_dev": float(cost.get("flops", 0.0)),
+        "bytes_dev": float(cost.get("bytes accessed", 0.0)),
+        "fused_bytes_dev": float(fused),
+        "coll_operand_dev": coll.operand_bytes,
+        "coll_wire_dev": coll.wire_bytes,
+    }
+
+
+def analysis_costs(arch: str, shape_name: str, multi_pod: bool,
+                   profile: str = "default",
+                   param_dtype: str | None = None) -> dict:
+    """Layer-marginal extrapolation from unrolled 1-/2-unit compiles."""
+    cfg_a, mult = analysis_variant(arch, 1, param_dtype)
+    cfg_b, _ = analysis_variant(arch, 2, param_dtype)
+    a = _cost_of(cfg_a, shape_name, multi_pod, profile)
+    b = _cost_of(cfg_b, shape_name, multi_pod, profile)
+    return {k: a[k] + (b[k] - a[k]) * mult for k in a}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, force=False,
+             profile: str = "default") -> dict:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    ptag = "" if profile == "default" else f"_{profile}"
+    out_path = RESULTS_DIR / f"dryrun_{arch}_{shape_name}_{mesh_tag}{ptag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod, profile)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = hlo_analysis.collective_bytes(hlo)  # scan-body counts (lower bound)
+
+    # Exact cost accounting: while-loop bodies are counted once by XLA's
+    # cost analysis, so FLOPs/bytes/collectives come from unrolled 1-/2-unit
+    # analysis compiles, extrapolated linearly in depth. cost_analysis is
+    # per-device -> scale to global for the roofline terms. The roofline
+    # table is single-pod (per assignment); the multi-pod pass proves the
+    # "pod" axis shards, so it skips the analysis compiles.
+    ac = None if multi_pod else analysis_costs(arch, shape_name, multi_pod,
+                                               profile)
+    record = dict(meta)
+    record.update(
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        scanbody_collective_by_op=coll.operand_by_op,
+        scanbody_collective_counts=coll.count_by_op,
+        memory_analysis={
+            k: getattr(mem, k)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+    )
+    model_fl = hlo_analysis.model_flops(
+        meta["params_active"], meta["tokens_per_step"],
+        "train" if meta["kind"] == "train" else "infer")
+    record["model_flops"] = model_fl
+    if ac is not None:
+        flops = ac["flops_dev"] * meta["chips"]
+        hbm_bytes = ac["fused_bytes_dev"] * meta["chips"]
+        record.update(
+            hlo_flops=flops,
+            hlo_bytes=hbm_bytes,
+            hlo_bytes_unfused=ac["bytes_dev"] * meta["chips"],
+            collective_operand_bytes_per_dev=ac["coll_operand_dev"],
+            collective_wire_bytes_per_dev=ac["coll_wire_dev"],
+            useful_flops_frac=model_fl / flops if flops else 0.0,
+            roofline=hlo_analysis.roofline_terms(
+                flops, hbm_bytes, ac["coll_wire_dev"], meta["chips"]),
+        )
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--profile", default="default")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(configs.ARCHS) if (args.all or not args.arch) else [args.arch]
+    for arch in archs:
+        cfg = configs.get_config(arch)
+        names = shapes_for(cfg) if (args.all or not args.shape) else [args.shape]
+        for sh in names:
+            meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+            for mp in meshes:
+                cells.append((arch, sh, mp))
+
+    ok = fail = 0
+    for arch, sh, mp in cells:
+        tag = f"{arch} × {sh} × {'2x16x16' if mp else '16x16'}"
+        try:
+            rec = run_cell(arch, sh, mp, force=args.force, profile=args.profile)
+            r = rec.get("roofline")
+            if r:
+                print(f"[dryrun] OK   {tag}: compile={rec['compile_s']}s "
+                      f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                      f"coll={r['collective_s']:.3e}s -> {r['bottleneck']}",
+                      flush=True)
+            else:
+                print(f"[dryrun] OK   {tag}: compile={rec['compile_s']}s "
+                      f"(multi-pod shard check)", flush=True)
+            ok += 1
+        except Exception:
+            print(f"[dryrun] FAIL {tag}", flush=True)
+            traceback.print_exc()
+            fail += 1
+    print(f"[dryrun] {ok} ok, {fail} failed", flush=True)
+    raise SystemExit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

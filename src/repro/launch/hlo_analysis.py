@@ -1,0 +1,189 @@
+"""Post-compile HLO analysis: collective-byte accounting + roofline terms.
+
+cost_analysis() gives FLOPs and bytes; collective traffic is not included,
+so we parse the optimized (post-SPMD, per-device) HLO text. Operands are
+printed without inline types in this mode, so per-op bytes are derived
+from the RESULT shape + replica-group size:
+
+    all-reduce          operand = result
+    all-gather          operand = result / group
+    reduce-scatter      operand = result * group
+    all-to-all          operand = result
+    collective-permute  operand = result
+
+Two aggregates are reported per device:
+  * operand_bytes  — the assignment's "sum of operand sizes",
+  * wire_bytes     — ring-algorithm bytes actually crossing ICI links
+                     (2(g-1)/g·x for all-reduce, (g-1)/g·x for ag/rs/a2a,
+                     x for permute); the roofline collective term uses
+                     wire_bytes / LINK_BW.
+
+Shapes in the optimized module are PER-DEVICE, so dividing by LINK_BW
+directly gives the per-chip link-time — equivalent to the assignment's
+collective_bytes/(chips·link_bw) with global byte sums.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_RESULT_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota form [n_groups, group_size]<=[...]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # explicit {{0,1,...},{...}} form; size of the first group
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    operand_by_op: dict = field(default_factory=dict)
+    wire_by_op: dict = field(default_factory=dict)
+    count_by_op: dict = field(default_factory=dict)
+
+    @property
+    def operand_bytes(self) -> int:
+        return sum(self.operand_by_op.values())
+
+    @property
+    def wire_bytes(self) -> int:
+        return sum(self.wire_by_op.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _RESULT_RE.search(line)
+        if not m:
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        op = m.group(2)
+        g = max(1, _group_size(line))
+        if op == "all-gather":
+            operand = result_bytes // g
+            wire = result_bytes * (g - 1) // g
+        elif op == "reduce-scatter":
+            operand = result_bytes * g
+            wire = result_bytes * (g - 1)
+        elif op == "all-reduce":
+            operand = result_bytes
+            wire = 2 * result_bytes * (g - 1) // g
+        elif op == "all-to-all":
+            operand = result_bytes
+            wire = result_bytes * (g - 1) // g
+        else:  # collective-permute: point-to-point
+            operand = result_bytes
+            wire = result_bytes
+        stats.operand_by_op[op] = stats.operand_by_op.get(op, 0) + operand
+        stats.wire_by_op[op] = stats.wire_by_op.get(op, 0) + wire
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Fused HBM-traffic model
+# ---------------------------------------------------------------------------
+# XLA:CPU's "bytes accessed" counts every op unfused (each elementwise op
+# re-reads/re-writes full tensors), wildly over-stating HBM traffic vs a
+# TPU where elementwise chains fuse into their producers. The fused model
+# counts IO only for ops that genuinely stream HBM on TPU: dots/convs,
+# gathers/scatters, reduces, dynamic-update-slices — operands + result —
+# plus entry parameters (read once) and outputs (written once).
+_DEF_RE = re.compile(r"%([\w.\-]+) = ([a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?|\([^=]*?\))")
+_TRAFFIC_OPS = ("dot(", "convolution(", "gather(", "scatter(",
+                "dynamic-update-slice(", "reduce(", "reduce-window(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def hbm_traffic_model(hlo_text: str, arg_bytes: int = 0, out_bytes: int = 0,
+                      dus_aliased: bool = False) -> int:
+    """dus_aliased=True models donated in-place cache updates: a
+    dynamic-update-slice costs only its update slice (read+write), not the
+    whole buffer — the honest TPU number for decode steps. The default
+    (False) is the conservative upper bound used in the §Roofline table."""
+    name_bytes: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.search(line)
+        if m:
+            name_bytes[m.group(1)] = _shape_bytes(m.group(2))
+    total = arg_bytes + out_bytes
+    for line in lines:
+        s = line.strip()
+        m = _DEF_RE.search(s)
+        if not m:
+            continue
+        rest = s[m.end():]
+        op_hit = next((op for op in _TRAFFIC_OPS if rest.lstrip().startswith(op.rstrip("(")  + "(")), None)
+        if op_hit is None:
+            continue
+        result = _shape_bytes(m.group(2))
+        call = rest.split("(", 1)[1]
+        call = call.split("), ", 1)[0]
+        names = _OPERAND_RE.findall(call)
+        operands = sum(name_bytes.get(n, 0) for n in names)
+        if dus_aliased and op_hit.startswith("dynamic-update-slice"):
+            upd = name_bytes.get(names[1], 0) if len(names) > 1 else 0
+            total += 2 * upd
+            continue
+        total += result + operands
+    return total
+
+
+# hardware constants: TPU v5e (assignment-provided)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes_per_dev: float,
+                   chips: int) -> dict:
+    """Three roofline terms in seconds (global FLOPs/bytes; per-dev wire)."""
+    terms = {
+        "compute_s": flops / (chips * PEAK_FLOPS),
+        "memory_s": hbm_bytes / (chips * HBM_BW),
+        "collective_s": wire_bytes_per_dev / LINK_BW,
+    }
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6·N·D for training, 2·N·D for inference forward passes."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch × shape).
+
+These carry shardings, so ``jax.jit(step).lower(**input_specs(...))``
+builds the full SPMD program without allocating a byte.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.dist import sharding
+from repro.models import model as model_mod
+
+
+def _sds(shape, dtype, axes, mesh, profile="default"):
+    return jax.ShapeDtypeStruct(
+        shape, dtype,
+        sharding=sharding.array_sharding(axes, shape, mesh, profile))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, profile="default"):
+    """Training-batch stand-ins: tokens/labels (+ vision embeddings)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks else (b, s)
+    tok_axes = ("batch", None, None) if cfg.n_codebooks else ("batch", None)
+    out = {
+        "tokens": _sds(tok_shape, jnp.int32, tok_axes, mesh, profile),
+        "labels": _sds(tok_shape, jnp.int32, tok_axes, mesh, profile),
+    }
+    if cfg.n_cross_layers:
+        out["vision_embeds"] = _sds(
+            (b, cfg.vision_seq, cfg.d_model), jnp.bfloat16,
+            ("batch", None, None), mesh, profile)
+    return out
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, profile="default"):
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks else (b, s)
+    tok_axes = ("batch", None, None) if cfg.n_codebooks else ("batch", None)
+    args = {"tokens": _sds(tok_shape, jnp.int32, tok_axes, mesh, profile)}
+    if cfg.n_cross_layers:
+        args["vision_embeds"] = _sds(
+            (b, cfg.vision_seq, cfg.d_model), jnp.bfloat16,
+            ("batch", None, None), mesh, profile)
+    return args
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, profile="default"):
+    """Decode-step stand-ins: one new token + S-long caches + position."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, 1, cfg.n_codebooks) if cfg.n_codebooks else (b, 1)
+    tok_axes = ("batch", None, None) if cfg.n_codebooks else ("batch", None)
+
+    cache_shapes = jax.eval_shape(
+        lambda: model_mod.init_caches(cfg, b, cache_len=s))
+    cache_axes = model_mod.cache_logical_axes(cfg)
+
+    rules = sharding.rules_for(profile)
+
+    def attach(sds_leaf, axes):
+        return jax.ShapeDtypeStruct(
+            sds_leaf.shape, sds_leaf.dtype,
+            sharding=NamedSharding(
+                mesh, sharding.resolve(axes, sds_leaf.shape, mesh, rules)))
+
+    is_axes = lambda x: isinstance(x, tuple) and len(x) > 0 and all(
+        isinstance(e, (str, type(None))) for e in x)
+    flat_shapes, treedef = jax.tree.flatten(cache_shapes)
+    flat_axes = jax.tree.flatten(cache_axes, is_leaf=is_axes)[0]
+    assert len(flat_shapes) == len(flat_axes), "cache axes/shape tree mismatch"
+    caches = jax.tree.unflatten(
+        treedef, [attach(s, a) for s, a in zip(flat_shapes, flat_axes)])
+
+    return {
+        "tokens": _sds(tok_shape, jnp.int32, tok_axes, mesh, profile),
+        "caches": caches,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

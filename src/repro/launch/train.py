@@ -1,0 +1,84 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+      --steps 100 --batch 8 --seq 128 [--ckpt-dir /tmp/ckpt] [--morph-data]
+
+On a real cluster this runs under `jax.distributed.initialize()` with the
+production mesh; on a dev box --smoke uses the reduced config on the
+local mesh. Fault tolerance (resume, preemption checkpoint, straggler
+counters) comes from train/loop.py.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.configs import RunConfig, ShapeConfig
+from repro.data import pipeline as data_pipeline
+from repro.train import loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--morph-data", action="store_true",
+                    help="Arabic char-LM stream with stemmer root labels")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch)
+    if args.smoke:
+        cfg = configs.smoke_config(cfg)
+    run = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("cli", args.seq, args.batch, "train"),
+        learning_rate=args.lr, lr_warmup=20, remat=args.remat,
+        microbatches=args.microbatches)
+
+    if args.morph_data:
+        import numpy as np
+
+        base = data_pipeline.morph_lm_batches(batch_words=2048, seq=args.seq)
+
+        def batched():
+            while True:
+                rows = [next(base) for _ in range(args.batch)]
+                yield {
+                    "tokens": np.concatenate([r["tokens"] for r in rows]),
+                    "labels": np.concatenate([r["labels"] for r in rows]),
+                }
+
+        data = batched()
+    else:
+        data = data_pipeline.synthetic_lm_batches(
+            cfg.vocab, args.batch, args.seq, effective_vocab=64)
+
+    def on_metrics(step, m):
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {float(m['loss']):.4f} "
+                  f"lr {float(m['lr']):.2e} gnorm {float(m['grad_norm']):.2f}",
+                  flush=True)
+
+    result = loop.fit(cfg, run, data, steps=args.steps,
+                      ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                      on_metrics=on_metrics)
+    print(f"done: {result.steps_run} steps, final loss "
+          f"{result.losses[-1]:.4f}, stragglers {result.straggler_events}, "
+          f"resumed_from {result.resumed_from}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,243 @@
+"""Attention: GQA/MQA/MHA self-attention (train / prefill / decode),
+sliding windows, cross-attention, ring-buffer KV caches.
+
+Implementation notes (memory-driven, see EXPERIMENTS §Perf):
+  * masks are ADDITIVE f32 biases computed from iotas, never boolean
+    `where` operands — a `select` saves its predicate for the backward
+    pass (O(scores) bools per q-block stacked across scans), an `add`
+    saves nothing;
+  * q-block chunking keeps the fp32 score matrix O(chunk × seq);
+  * q/k/v carry explicit sharding constraints so the SPMD partitioner
+    cannot re-replicate the batch when heads don't divide the model axis;
+  * decode KV caches shard their sequence dim on the model axis
+    (FlashDecoding-style split-KV): each shard computes a partial softmax
+    and XLA stitches the global softmax with small stat all-reduces.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.scan_utils import scan as _scan
+
+from repro.models import layers
+
+NEG = -1e30
+
+
+def attn_spec(cfg):
+    from repro.models.params import ParamSpec
+
+    hd = cfg.head_dim
+    s = {
+        "wq": ParamSpec((cfg.d_model, cfg.n_heads, hd), ("fsdp", "model", None)),
+        "wk": ParamSpec((cfg.d_model, cfg.n_kv_heads, hd), ("fsdp", "model", None)),
+        "wv": ParamSpec((cfg.d_model, cfg.n_kv_heads, hd), ("fsdp", "model", None)),
+        "wo": ParamSpec((cfg.n_heads, hd, cfg.d_model), ("model", None, "fsdp")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((cfg.n_heads, hd), ("model", None), init="zeros")
+        s["bk"] = ParamSpec((cfg.n_kv_heads, hd), ("model", None), init="zeros")
+        s["bv"] = ParamSpec((cfg.n_kv_heads, hd), ("model", None), init="zeros")
+    return s
+
+
+def cross_attn_spec(cfg):
+    return attn_spec(cfg)
+
+
+class KVCache(NamedTuple):
+    """k/v: [B, S_cache, n_kv, head_dim]; ring buffer iff S_cache < seq."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(token, head) scales — halves the decode
+    memory floor vs bf16 (KIVI/KVQuant-style, symmetric per-vector).
+
+    k/v: int8[B, S, KV, hd]; k_scale/v_scale: f32[B, S, KV, 1]."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    k_scale: jnp.ndarray
+    v_scale: jnp.ndarray
+
+
+def quantise_kv(x: jnp.ndarray):
+    """bf16 [..., hd] -> (int8 [..., hd], f32 scale [..., 1])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantise_kv(q: jnp.ndarray, scale: jnp.ndarray, dt) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dt)
+
+
+def _cst(constrain, x, axes):
+    return constrain(x, axes) if constrain is not None else x
+
+
+def _qkv(p, x, cfg, dt, constrain=None):
+    q = jnp.einsum("btd,dnh->btnh", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dnh->btnh", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dnh->btnh", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = _cst(constrain, q, ("batch", None, "heads", None))
+    k = _cst(constrain, k, ("batch", None, "heads", None))
+    v = _cst(constrain, v, ("batch", None, "heads", None))
+    return q, k, v
+
+
+def _sdpa(q, k, v, bias, n_rep: int):
+    """q [B,Tq,H,hd]; k/v [B,S,KV,hd]; bias additive f32, broadcastable to
+    [B,KV,rep,Tq,S] (or None)."""
+    b, tq, h, hd = q.shape
+    kv = k.shape[2]
+    q = q.reshape(b, tq, kv, n_rep, hd)
+    scores = jnp.einsum("btkrh,bskh->bkrts", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if bias is not None:
+        scores = scores + bias
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrts,bskh->btkrh", w, v)
+    return out.reshape(b, tq, h, hd)
+
+
+def _causal_bias(tq: int, s: int, offset, window: int):
+    """f32[1,1,1,tq,s] additive causal(+window) bias from iotas."""
+    qpos = offset + jnp.arange(tq)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG).astype(jnp.float32)[None, None, None]
+
+
+def _attend_chunked(q, k, v, cfg, n_rep, chunk_q):
+    b, t = q.shape[0], q.shape[1]
+    if chunk_q and t % chunk_q == 0 and t > chunk_q:
+        nblk = t // chunk_q
+
+        # The block body is checkpointed: without it the scan stacks the
+        # softmax residuals of every block (a full seq x seq fp32 score
+        # matrix — exactly what chunking is meant to avoid). Recomputing
+        # each block's scores in the backward pass is the FlashAttention
+        # trade: ~1 extra flop-pass for O(chunk*seq) memory.
+        @jax.checkpoint
+        def body_inner(qb, i):
+            bias = _causal_bias(chunk_q, t, i * chunk_q, cfg.sliding_window)
+            return _sdpa(qb, k, v, bias, n_rep)
+
+        def body(_, qb_i):
+            return None, body_inner(*qb_i)
+
+        qs = jnp.moveaxis(
+            q.reshape(b, nblk, chunk_q, cfg.n_heads, cfg.head_dim), 1, 0)
+        _, outs = _scan(body, None, (qs, jnp.arange(nblk)),
+                        unroll=getattr(cfg, 'unroll_scans', False))
+        return jnp.moveaxis(outs, 0, 1).reshape(b, t, cfg.n_heads, cfg.head_dim)
+    bias = _causal_bias(t, t, 0, cfg.sliding_window)
+    return _sdpa(q, k, v, bias, n_rep)
+
+
+def self_attention(p, x, cfg, *, positions, chunk_q: int = 0, dt=jnp.bfloat16,
+                   constrain=None):
+    """Full-sequence causal attention (train)."""
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(p, x, cfg, dt, constrain)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    q = _cst(constrain, q, ("batch", None, "heads", None))
+    k = _cst(constrain, k, ("batch", None, "heads", None))
+    out = _attend_chunked(q, k, v, cfg, n_rep, chunk_q)
+    return jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(dt))
+
+
+def prefill_attention(p, x, cfg, *, positions, cache_len: int, dt=jnp.bfloat16,
+                      constrain=None):
+    """Causal attention that also returns the KV cache (ring-truncated)."""
+    t = x.shape[1]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(p, x, cfg, dt, constrain)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    q = _cst(constrain, q, ("batch", None, "heads", None))
+    k = _cst(constrain, k, ("batch", None, "heads", None))
+    chunk = 1024 if (t > 4096 and t % 1024 == 0) else 0
+    out = _attend_chunked(q, k, v, cfg, n_rep, chunk)
+    y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(dt))
+    if cache_len < t:  # ring buffer keeps the last cache_len positions
+        k, v = k[:, -cache_len:], v[:, -cache_len:]
+    k = _cst(constrain, k, ("batch", "kv_seq", None, None))
+    v = _cst(constrain, v, ("batch", "kv_seq", None, None))
+    if getattr(cfg, "kv_quant", False):
+        kq, ks = quantise_kv(k)
+        vq, vs = quantise_kv(v)
+        return y, QuantKVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
+    return y, KVCache(k=k, v=v)
+
+
+def decode_attention(p, x, cfg, cache, *, pos, dt=jnp.bfloat16,
+                     constrain=None):
+    """Single-token decode against a (possibly ring, possibly int8) cache.
+
+    x [B,1,d]; pos scalar int32 — global position of the new token.
+    """
+    s_cache = cache.k.shape[1]
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(p, x, cfg, dt, constrain)
+    posv = pos[None] if pos.ndim == 0 else pos
+    q = layers.apply_rope(q, posv, cfg.rope_theta)
+    k = layers.apply_rope(k, posv, cfg.rope_theta)
+
+    slot = pos % s_cache
+    quant = isinstance(cache, QuantKVCache)
+    if quant:
+        kq, ks = quantise_kv(k)
+        vq, vs = quantise_kv(v)
+        cache = QuantKVCache(
+            k=jax.lax.dynamic_update_slice_in_dim(cache.k, kq, slot, axis=1),
+            v=jax.lax.dynamic_update_slice_in_dim(cache.v, vq, slot, axis=1),
+            k_scale=jax.lax.dynamic_update_slice_in_dim(
+                cache.k_scale, ks, slot, axis=1),
+            v_scale=jax.lax.dynamic_update_slice_in_dim(
+                cache.v_scale, vs, slot, axis=1))
+        new_k = dequantise_kv(cache.k, cache.k_scale, dt)
+        new_v = dequantise_kv(cache.v, cache.v_scale, dt)
+    else:
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    new_k = _cst(constrain, new_k, ("batch", "kv_seq", None, None))
+    new_v = _cst(constrain, new_v, ("batch", "kv_seq", None, None))
+
+    # valid cache slots: ring position maps slot -> global position
+    idx = jnp.arange(s_cache)
+    kpos = jnp.where(idx <= slot, pos - slot + idx, pos - slot - s_cache + idx)
+    ok = (kpos >= 0) & (kpos <= pos)
+    if cfg.sliding_window:
+        ok &= kpos > pos - cfg.sliding_window
+    bias = jnp.where(ok, 0.0, NEG).astype(jnp.float32)[None, None, None, None]
+
+    out = _sdpa(q, new_k, new_v, bias, n_rep)
+    y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(dt))
+    return y, (cache if quant else KVCache(k=new_k, v=new_v))
+
+
+def cross_attention(p, x, enc, cfg, dt=jnp.bfloat16, constrain=None):
+    """x [B,T,d] attends to encoder states enc [B,S,d] (no mask, no rope)."""
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q = jnp.einsum("btd,dnh->btnh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dnh->bsnh", enc, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dnh->bsnh", enc, p["wv"].astype(dt))
+    q = _cst(constrain, q, ("batch", None, "heads", None))
+    out = _sdpa(q, k, v, None, n_rep)
+    return jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(dt))

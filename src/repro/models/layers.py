@@ -1,0 +1,88 @@
+"""Shared neural layers: norms, RoPE, linear helpers, gated FFNs.
+
+All parameters are declared as ParamSpec trees (models/params.py); apply
+functions take the materialised (or abstract) value trees. Logical
+sharding axes used here:
+
+  fsdp    — weight dim sharded over the data(+pod) axes (ZeRO-3 style)
+  model   — tensor-parallel dim (heads / ff / vocab / experts)
+  batch   — activation batch dim over (pod, data)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_spec(d: int):
+    return {"scale": ParamSpec((d,), (None,), init="ones")}
+
+
+def rmsnorm(p, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., T, n, head_dim]; positions broadcastable to [..., T]."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, hd/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+def linear_spec(d_in: int, d_out: int, axes=("fsdp", "model"), bias=False, scale=None):
+    s = {"w": ParamSpec((d_in, d_out), axes, scale=scale)}
+    if bias:
+        s["b"] = ParamSpec((d_out,), (axes[1],), init="zeros")
+    return s
+
+
+def linear(p, x, compute_dtype=jnp.bfloat16):
+    y = x @ p["w"].astype(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Gated FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+def ffn_spec(d: int, d_ff: int, kind: str = "swiglu"):
+    s = {
+        "wi": ParamSpec((d, d_ff), ("fsdp", "model")),
+        "wo": ParamSpec((d_ff, d), ("model", "fsdp")),
+    }
+    if kind != "mlp":
+        s["wg"] = ParamSpec((d, d_ff), ("fsdp", "model"))
+    return s
+
+
+def ffn(p, x, kind: str = "swiglu", compute_dtype=jnp.bfloat16):
+    dt = compute_dtype
+    h = x @ p["wi"].astype(dt)
+    if kind == "mlp":  # plain 2-matrix GELU MLP (MusicGen / classic)
+        return jax.nn.gelu(h) @ p["wo"].astype(dt)
+    g = x @ p["wg"].astype(dt)
+    act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+    return (act * h) @ p["wo"].astype(dt)

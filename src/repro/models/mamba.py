@@ -1,0 +1,149 @@
+"""Mamba-1 selective SSM block: chunked associative-scan training path +
+O(1)-state decode path.
+
+TPU adaptation (see DESIGN.md): the CUDA selective-scan kernel fuses the
+recurrence in SRAM; on TPU we chunk the sequence (cfg.ssm_chunk) and run a
+`jax.lax.associative_scan` *within* chunks (log-depth, VPU friendly) with a
+`lax.scan` carrying the [B, d_inner, N] state *across* chunks — the
+intermediate [B, chunk, d_inner, N] tensor is what bounds VMEM/HBM traffic
+instead of the full [B, T, d_inner, N].
+
+Tensor parallelism: d_inner is Megatron-style column/row parallel
+(in_proj column, out_proj row); the recurrence is elementwise over
+d_inner so shards never communicate inside the scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+from repro.models.scan_utils import scan as _scan
+
+
+def mamba_spec(cfg):
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("fsdp", "model")),
+        "conv_w": ParamSpec((cfg.d_conv, di), (None, "model"), scale=0.2),
+        "conv_b": ParamSpec((di,), ("model",), init="zeros"),
+        "x_proj": ParamSpec((di, r + 2 * n), ("model", None)),
+        "dt_proj": ParamSpec((r, di), (None, "model"), scale=0.1),
+        "dt_bias": ParamSpec((di,), ("model",), init="zeros"),
+        "a_log": ParamSpec((di, n), ("model", None), init="ones"),
+        "d_skip": ParamSpec((di,), ("model",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("model", "fsdp")),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray  # [B, d_conv-1, d_inner] trailing conv inputs
+    ssm: jnp.ndarray   # [B, d_inner, N] recurrent state (fp32)
+
+
+def init_cache(cfg, batch: int, dtype=jnp.bfloat16) -> MambaCache:
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    )
+
+
+def _ssm_inputs(p, xc, cfg, dt):
+    """xc [B,T,di] (post-conv, post-silu) -> (delta, B_ssm, C_ssm)."""
+    n, r = cfg.ssm_state, cfg.dt_rank_
+    proj = xc @ p["x_proj"].astype(dt)
+    dt_in, b_ssm, c_ssm = jnp.split(proj, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(
+        dt_in @ p["dt_proj"].astype(dt) + p["dt_bias"].astype(dt)
+    ).astype(jnp.float32)
+    return delta, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def _causal_conv(p, x, cfg, dt, history=None):
+    """Depthwise causal conv1d. history [B, d_conv-1, di] or None (zeros)."""
+    k = cfg.d_conv
+    if history is None:
+        history = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    w = p["conv_w"].astype(dt)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return out + p["conv_b"].astype(dt), xp[:, -(k - 1) :]
+
+
+def _scan_chunks(a, bx, h0, chunk: int, unroll: bool = False):
+    """h_t = a_t * h_{t-1} + bx_t over T, chunked.
+
+    a, bx: [B, T, di, N] fp32; h0 [B, di, N]. Returns (h_all [B,T,di,N], h_T).
+    """
+    b, t, di, n = a.shape
+    nc = t // chunk
+    a_c = a.reshape(b, nc, chunk, di, n).swapaxes(0, 1)
+    bx_c = bx.reshape(b, nc, chunk, di, n).swapaxes(0, 1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def step(h, inputs):
+        ac, bc = inputs
+        ca, cb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = ca * h[:, None] + cb
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = _scan(step, h0, (a_c, bx_c), unroll=unroll)
+    return h_chunks.swapaxes(0, 1).reshape(b, t, di, n), h_last
+
+
+def mamba_block(p, x, cfg, *, dt=jnp.bfloat16, cache: MambaCache | None = None,
+                constrain=None):
+    """Full-sequence Mamba block. Returns (y, new_cache)."""
+    cst = constrain or (lambda v, a: v)
+    b, t, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = x @ p["in_proj"].astype(dt)
+    xz = cst(xz, ("batch", None, "model"))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_hist = _causal_conv(p, x_in, cfg, dt,
+                                 cache.conv if cache is not None else None)
+    xc = jax.nn.silu(xc)
+
+    delta, b_ssm, c_ssm = _ssm_inputs(p, xc, cfg, dt)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                 # [di, N]
+    abar = jnp.exp(delta[..., None] * a)                         # [B,T,di,N]
+    bx = (delta * xc.astype(jnp.float32))[..., None] * b_ssm[:, :, None, :]
+
+    h0 = cache.ssm if cache is not None else jnp.zeros((b, di, n), jnp.float32)
+    chunk = min(cfg.ssm_chunk, t)
+    if t % chunk:
+        chunk = t
+    h_all, h_last = _scan_chunks(abar, bx, h0, chunk,
+                                 unroll=getattr(cfg, 'unroll_scans', False))
+
+    y = jnp.einsum("btdn,btn->btd", h_all, c_ssm).astype(dt)
+    y = y + xc * p["d_skip"].astype(dt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    return out, MambaCache(conv=conv_hist, ssm=h_last)
+
+
+def mamba_decode(p, x, cfg, cache: MambaCache, *, dt=jnp.bfloat16):
+    """Single-token step: O(d_inner * N) state update, no scan."""
+    b = x.shape[0]
+    xz = x @ p["in_proj"].astype(dt)
+    x_in, z = jnp.split(xz, 2, axis=-1)                          # [B,1,di]
+    xc, conv_hist = _causal_conv(p, x_in, cfg, dt, cache.conv)
+    xc = jax.nn.silu(xc)
+
+    delta, b_ssm, c_ssm = _ssm_inputs(p, xc, cfg, dt)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    abar = jnp.exp(delta[:, 0, :, None] * a)                     # [B,di,N]
+    bx = (delta[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * b_ssm[:, 0, None, :]
+    h = abar * cache.ssm + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0])[:, None].astype(dt)
+    y = y + xc * p["d_skip"].astype(dt)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dt)
+    return out, MambaCache(conv=conv_hist, ssm=h)

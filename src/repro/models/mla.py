@@ -1,0 +1,142 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — train, prefill, decode.
+
+The decode path uses the *absorbed* formulation: W_uk is folded into the
+query and W_uv into the output so the cache holds only the compressed
+latent c_kv [B,S,kv_lora] + the shared rope key [B,S,rope_dim]; per-step
+FLOPs contract against the latent directly, never re-expanding K/V.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.scan_utils import scan as _scan
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+def mla_spec(cfg):
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": ParamSpec((cfg.d_model, cfg.n_heads, qk), ("fsdp", "model", None)),
+        "wdkv": ParamSpec((cfg.d_model, cfg.kv_lora_rank), ("fsdp", None)),
+        "wkr": ParamSpec((cfg.d_model, cfg.qk_rope_dim), ("fsdp", None)),
+        "kv_norm": ParamSpec((cfg.kv_lora_rank,), (None,), init="ones"),
+        "wuk": ParamSpec(
+            (cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_dim), (None, "model", None)
+        ),
+        "wuv": ParamSpec(
+            (cfg.kv_lora_rank, cfg.n_heads, cfg.v_head_dim), (None, "model", None)
+        ),
+        "wo": ParamSpec((cfg.n_heads, cfg.v_head_dim, cfg.d_model),
+                        ("model", None, "fsdp")),
+    }
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray    # [B, S, kv_lora]
+    k_rope: jnp.ndarray  # [B, S, rope_dim]
+
+
+def _latents(p, x, cfg, positions, dt):
+    c_kv = x @ p["wdkv"].astype(dt)
+    c_kv = layers.rmsnorm({"scale": p["kv_norm"]}, c_kv, cfg.rms_eps)
+    k_r = (x @ p["wkr"].astype(dt))[:, :, None, :]  # [B,S,1,rope]
+    k_r = layers.apply_rope(k_r, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_r
+
+
+def _queries(p, x, cfg, positions, dt):
+    q = jnp.einsum("btd,dnh->btnh", x, p["wq"].astype(dt))
+    q_n = q[..., : cfg.qk_nope_dim]
+    q_r = layers.apply_rope(q[..., cfg.qk_nope_dim :], positions, cfg.rope_theta)
+    return q_n, q_r
+
+
+def _causal_bias(tq: int, s: int, offset) -> jnp.ndarray:
+    qpos = offset + jnp.arange(tq)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    return jnp.where(kpos <= qpos, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def mla_attention(p, x, cfg, *, positions, dt=jnp.bfloat16, return_cache=False,
+                  cache_len: int = 0, constrain=None):
+    """Full-sequence causal MLA (train / prefill), q-block chunked."""
+    b, t, _ = x.shape
+    cst = constrain or (lambda v_, a: v_)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    c_kv, k_r = _latents(p, x, cfg, positions, dt)
+    q_n, q_r = _queries(p, x, cfg, positions, dt)
+    q_n = cst(q_n, ("batch", None, "heads", None))
+    k_n = jnp.einsum("btl,lnh->btnh", c_kv, p["wuk"].astype(dt))
+    v = jnp.einsum("btl,lnh->btnh", c_kv, p["wuv"].astype(dt))
+    k_n = cst(k_n, ("batch", None, "heads", None))
+    v = cst(v, ("batch", None, "heads", None))
+
+    chunk = 512 if (t >= 4096 and t % 512 == 0) else 0
+
+    def attend(qn_b, qr_b, offset):
+        scores = jnp.einsum("btnh,bsnh->bnts", qn_b, k_n)
+        scores = scores + jnp.einsum("btnh,bsh->bnts", qr_b, k_r)
+        scores = scores.astype(jnp.float32) * scale
+        scores = scores + _causal_bias(qn_b.shape[1], t, offset)[None, None]
+        w = jax.nn.softmax(scores, axis=-1).astype(dt)
+        return jnp.einsum("bnts,bsnh->btnh", w, v)
+
+    if chunk and t > chunk:
+        nblk = t // chunk
+        attend_ckpt = jax.checkpoint(attend)  # don't stack softmax residuals
+
+        def body(_, xs):
+            qn_b, qr_b, i = xs
+            return None, attend_ckpt(qn_b, qr_b, i * chunk)
+
+        qn_s = jnp.moveaxis(q_n.reshape(b, nblk, chunk, *q_n.shape[2:]), 1, 0)
+        qr_s = jnp.moveaxis(q_r.reshape(b, nblk, chunk, *q_r.shape[2:]), 1, 0)
+        _, outs = _scan(body, None, (qn_s, qr_s, jnp.arange(nblk)),
+                        unroll=getattr(cfg, 'unroll_scans', False))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, t, cfg.n_heads, cfg.v_head_dim)
+    else:
+        out = attend(q_n, q_r, 0)
+    y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(dt))
+    if return_cache:
+        cl = cache_len or t
+        cache = MLACache(
+            c_kv=cst(c_kv[:, -cl:], ("batch", "kv_seq", None)),
+            k_rope=cst(k_r[:, -cl:], ("batch", "kv_seq", None)))
+        return y, cache
+    return y
+
+
+def mla_decode(p, x, cfg, cache: MLACache, *, pos, dt=jnp.bfloat16,
+               constrain=None):
+    """Absorbed single-token decode: contractions stay in latent space."""
+    cst = constrain or (lambda v_, a: v_)
+    s = cache.c_kv.shape[1]
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    posv = pos[None] if pos.ndim == 0 else pos
+
+    c_new, kr_new = _latents(p, x, cfg, posv, dt)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_new, pos % s, axis=1)
+    k_r = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, kr_new, pos % s, axis=1)
+    c_kv = cst(c_kv, ("batch", "kv_seq", None))
+    k_r = cst(k_r, ("batch", "kv_seq", None))
+
+    q_n, q_r = _queries(p, x, cfg, posv, dt)
+    # absorb W_uk into the query: q_lat [B,1,H,lora]
+    q_lat = jnp.einsum("btnh,lnh->btnl", q_n, p["wuk"].astype(dt))
+    scores = jnp.einsum("btnl,bsl->bnts", q_lat, c_kv)
+    scores = scores + jnp.einsum("btnh,bsh->bnts", q_r, k_r)
+    scores = scores.astype(jnp.float32) * scale
+    bias = jnp.where(jnp.arange(s) <= pos, 0.0, NEG_INF).astype(jnp.float32)
+    scores = scores + bias[None, None, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    # absorbed output: contract attention against the latent, then W_uv
+    out_lat = jnp.einsum("bnts,bsl->btnl", w, c_kv)
+    out = jnp.einsum("btnl,lnh->btnh", out_lat, p["wuv"].astype(dt))
+    y = jnp.einsum("btnh,nhd->btd", out, p["wo"].astype(dt))
+    return y, MLACache(c_kv=c_kv, k_rope=k_r)

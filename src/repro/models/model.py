@@ -1,0 +1,415 @@
+"""Model assembly: embeddings, scan-over-layers stacks, output heads,
+losses, and the three execution modes (full/train, prefill, decode).
+
+Scan-over-layers keeps compiled HLO size depth-independent (one layer
+body + a loop), which is what makes 94-layer × 512-device AOT compiles
+tractable. Heterogeneous stacks are expressed as *multiple homogeneous
+scans*: DeepSeek's leading dense layers, and the VLM's grouped
+(1 cross + k self) structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import blocks, layers, mamba, mla
+from repro.models import params as pm
+from repro.models.scan_utils import scan as _scan
+from repro.models.params import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# spec
+# ---------------------------------------------------------------------------
+def model_spec(cfg):
+    s: dict = {}
+    if cfg.n_codebooks:
+        s["embed"] = ParamSpec((cfg.n_codebooks, cfg.vocab, cfg.d_model),
+                               (None, "model", "fsdp"), scale=0.02)
+    else:
+        s["embed"] = ParamSpec((cfg.vocab, cfg.d_model), ("model", "fsdp"),
+                               scale=0.02)
+    if cfg.n_cross_layers:
+        n_self = cfg.n_layers
+        s["self_blocks"] = pm.stack(
+            blocks.strip_markers(blocks.block_spec(cfg, moe_layer=False)), n_self)
+        s["cross_blocks"] = pm.stack(blocks.cross_block_spec(cfg), cfg.n_cross_layers)
+    elif cfg.first_dense:
+        dense = blocks.strip_markers(blocks.block_spec(cfg, moe_layer=False))
+        moe_b = blocks.strip_markers(blocks.block_spec(cfg, moe_layer=True))
+        s["dense_blocks"] = pm.stack(dense, cfg.first_dense)
+        s["blocks"] = pm.stack(moe_b, cfg.n_layers - cfg.first_dense)
+    else:
+        s["blocks"] = pm.stack(
+            blocks.strip_markers(blocks.block_spec(cfg)), cfg.n_layers)
+    s["final_norm"] = layers.rmsnorm_spec(cfg.d_model)
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks:
+            s["head"] = ParamSpec((cfg.n_codebooks, cfg.d_model, cfg.vocab),
+                                  (None, "fsdp", "model"), scale=0.02)
+        else:
+            s["head"] = ParamSpec((cfg.d_model, cfg.vocab), ("fsdp", "model"),
+                                  scale=0.02)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+def embed_tokens(p, cfg, tokens, dt):
+    if cfg.n_codebooks:
+        return _audio_embed(p, cfg, tokens, dt)
+    h = jnp.take(p["embed"].astype(dt), tokens, axis=0)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt)
+    return h
+
+
+def _audio_embed(p, cfg, tokens, dt):
+    """tokens [B,T,K] -> [B,T,d]: per-codebook table lookup, summed."""
+    tables = p["embed"].astype(dt)  # [K, V, d]
+    h = 0.0
+    for k in range(cfg.n_codebooks):
+        h = h + jnp.take(tables[k], tokens[..., k], axis=0)
+    return h
+
+
+def logits_fn(p, cfg, h, dt):
+    if cfg.n_codebooks:
+        return jnp.einsum("btd,kdv->btkv", h, p["head"].astype(dt))
+    if cfg.tie_embeddings:
+        return jnp.einsum("btd,vd->btv", h, p["embed"].astype(dt))
+    return h @ p["head"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# forward (full / prefill)
+# ---------------------------------------------------------------------------
+class ModelOutputs(NamedTuple):
+    logits: jnp.ndarray
+    aux_loss: jnp.ndarray
+    caches: Any = ()
+
+
+def forward(p, cfg, tokens, *, vision_embeds=None, mode="full",
+            constrain=None, remat_policy=None, return_hidden=False):
+    """tokens [B,T] (or [B,T,K] audio). mode: full | prefill.
+
+    return_hidden=True skips the output head and returns the final hidden
+    states in `.logits` (used by the fused chunked CE loss)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    cst = constrain or (lambda v, axes: v)
+    if cfg.n_codebooks:
+        h = _audio_embed(p, cfg, tokens, dt)
+        t = tokens.shape[1]
+    else:
+        h = embed_tokens(p, cfg, tokens, dt)
+        t = tokens.shape[1]
+    h = cst(h, ("batch", "act_seq", None))
+    positions = jnp.arange(t, dtype=jnp.int32)
+
+    def layer_fn(h, lp, moe_layer):
+        h2, cache, aux = blocks.block(
+            lp, h, cfg, mode=mode, positions=positions,
+            moe_layer=moe_layer, constrain=constrain, dt=dt)
+        h2 = cst(h2, ("batch", "act_seq", None))
+        return h2, cache, aux
+
+    if remat_policy is not None:
+        layer_fn = jax.checkpoint(layer_fn, policy=remat_policy,
+                                  static_argnums=(2,))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    caches: dict = {}
+
+    if cfg.n_cross_layers:
+        g = cfg.group_self
+        sp = jax.tree.map(
+            lambda x: x.reshape(cfg.n_cross_layers, g, *x.shape[1:]),
+            p["self_blocks"])
+        cross_caches = []
+
+        def group_fn(h, xs):
+            cross_p, self_p = xs
+            h = blocks.cross_block(cross_p, h, vision_embeds, cfg, dt=dt)
+            h = cst(h, ("batch", "act_seq", None))
+
+            def inner(h, lp):
+                h2, cache, aux = layer_fn(h, lp, False)
+                return h2, (cache, aux)
+
+            h, (cache, aux) = _scan(inner, h, self_p, unroll=cfg.unroll_scans)
+            return h, (cache, aux.sum())
+
+        h, (self_cache, aux_g) = _scan(group_fn, h, (p["cross_blocks"], sp), unroll=cfg.unroll_scans)
+        aux_total += aux_g.sum()
+        caches["self"] = self_cache
+        if mode == "prefill":
+            # cross-attention K/V from the (fixed) vision embeddings
+            caches["cross"] = _cross_kv(p["cross_blocks"], cfg, vision_embeds, dt)
+    else:
+        if cfg.first_dense:
+            def dense_fn(h, lp):
+                h2, cache, aux = layer_fn(h, lp, False)
+                return h2, (cache, aux)
+
+            h, (dcache, daux) = _scan(dense_fn, h, p["dense_blocks"], unroll=cfg.unroll_scans)
+            aux_total += daux.sum()
+            caches["dense"] = dcache
+
+        def moe_fn(h, lp):
+            h2, cache, aux = layer_fn(h, lp, cfg.is_moe)
+            return h2, (cache, aux)
+
+        h, (cache, aux_l) = _scan(moe_fn, h, p["blocks"], unroll=cfg.unroll_scans)
+        aux_total += aux_l.sum()
+        caches["blocks"] = cache
+
+    h = layers.rmsnorm(p["final_norm"], h, cfg.rms_eps)
+    if return_hidden:
+        return ModelOutputs(logits=h, aux_loss=aux_total, caches=())
+    logits = logits_fn(p, cfg, h, dt)
+    logits = cst(logits, ("batch", None, "model") if not cfg.n_codebooks
+                 else ("batch", None, None, "model"))
+    return ModelOutputs(logits=logits, aux_loss=aux_total,
+                        caches=caches if mode == "prefill" else ())
+
+
+def _cross_kv(cross_p, cfg, enc, dt):
+    """Precompute cross-attention K/V for all cross layers: [L,B,S,KV,hd]."""
+
+    def one(lp):
+        k = jnp.einsum("bsd,dnh->bsnh", enc, lp["attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dnh->bsnh", enc, lp["attn"]["wv"].astype(dt))
+        return attn_mod.KVCache(k=k, v=v)
+
+    return jax.vmap(one)(cross_p)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def xent_loss(logits, labels, z_weight: float = 1e-4):
+    """Stable CE with z-loss. labels [B,T] (or [B,T,K]); -1 = masked."""
+    ce, zl, n = _xent_sums(logits, labels)
+    return (ce + z_weight * zl) / jnp.clip(n, 1)
+
+
+def _xent_sums(logits, labels):
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(
+        logits32, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return ((lse - gold) * mask).sum(), ((lse ** 2) * mask).sum(), mask.sum()
+
+
+def chunked_xent_loss(p, cfg, h, labels, *, chunk: int = 512,
+                      z_weight: float = 1e-4):
+    """Head matmul + CE fused per sequence block: the [B,T,V] logits tensor
+    is never materialised (neither fwd nor — via rematerialised blocks —
+    bwd). This is what bounds vocab-dominated memory for 128k-256k vocabs."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    b, t = h.shape[:2]
+    nb = t // chunk
+    hb = jnp.moveaxis(h.reshape(b, nb, chunk, *h.shape[2:]), 1, 0)
+    lb = jnp.moveaxis(labels.reshape(b, nb, chunk, *labels.shape[2:]), 1, 0)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def block_sums(hs, ls):
+        return _xent_sums(logits_fn(p, cfg, hs, dt), ls)
+
+    def body(carry, xs):
+        ce, zl, n = block_sums(*xs)
+        return (carry[0] + ce, carry[1] + zl, carry[2] + n), None
+
+    (ce, zl, n), _ = _scan(body, (0.0, 0.0, 0.0), (hb, lb), unroll=cfg.unroll_scans)
+    return (ce + z_weight * zl) / jnp.clip(n, 1)
+
+
+def loss_fn(p, cfg, batch, *, constrain=None, remat_policy=None):
+    tokens, labels = batch["tokens"], batch["labels"]
+    t = tokens.shape[1]
+    lc = cfg.loss_chunk
+    chunk = lc if (t >= 2048 and lc and t % lc == 0) else 0
+    out = forward(p, cfg, tokens, constrain=constrain,
+                  vision_embeds=batch.get("vision_embeds"),
+                  remat_policy=remat_policy,
+                  return_hidden=bool(chunk))
+    if chunk:
+        ce = chunked_xent_loss(p, cfg, out.logits, labels, chunk=chunk)
+    else:
+        ce = xent_loss(out.logits, labels)
+    return ce + out.aux_loss.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_caches(cfg, batch: int, cache_len: int, dt=jnp.bfloat16):
+    """Abstract-shaped zero caches for every layer stack."""
+
+    def attn_cache(n):
+        cl = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        if cfg.kv_quant:
+            zq = jnp.zeros((n, batch, cl, cfg.n_kv_heads, cfg.head_dim), jnp.int8)
+            zs = jnp.ones((n, batch, cl, cfg.n_kv_heads, 1), jnp.float32)
+            return attn_mod.QuantKVCache(k=zq, v=zq, k_scale=zs, v_scale=zs)
+        z = jnp.zeros((n, batch, cl, cfg.n_kv_heads, cfg.head_dim), dt)
+        return attn_mod.KVCache(k=z, v=z)
+
+    def mla_cache(n):
+        return mla.MLACache(
+            c_kv=jnp.zeros((n, batch, cache_len, cfg.kv_lora_rank), dt),
+            k_rope=jnp.zeros((n, batch, cache_len, cfg.qk_rope_dim), dt))
+
+    def ssm_cache(n):
+        return mamba.MambaCache(
+            conv=jnp.zeros((n, batch, cfg.d_conv - 1, cfg.d_inner), dt),
+            ssm=jnp.zeros((n, batch, cfg.d_inner, cfg.ssm_state), jnp.float32))
+
+    def block_cache(n, moe=False):
+        if cfg.block == "mamba":
+            return blocks.BlockCache(kv=(), ssm=ssm_cache(n))
+        if cfg.block == "hymba":
+            return blocks.BlockCache(kv=attn_cache(n), ssm=ssm_cache(n))
+        if cfg.attn_impl == "mla":
+            return blocks.BlockCache(kv=mla_cache(n), ssm=())
+        return blocks.BlockCache(kv=attn_cache(n), ssm=())
+
+    caches: dict = {}
+    if cfg.n_cross_layers:
+        caches["self"] = jax.tree.map(
+            lambda x: x.reshape(cfg.n_cross_layers, cfg.group_self, *x.shape[1:]),
+            block_cache(cfg.n_layers))
+        z = jnp.zeros((cfg.n_cross_layers, batch, cfg.vision_seq,
+                       cfg.n_kv_heads, cfg.head_dim), dt)
+        caches["cross"] = attn_mod.KVCache(k=z, v=z)
+    else:
+        if cfg.first_dense:
+            caches["dense"] = block_cache(cfg.first_dense)
+        caches["blocks"] = block_cache(cfg.n_layers - cfg.first_dense)
+    return caches
+
+
+def cache_logical_axes(cfg):
+    """Logical sharding axes for every leaf of init_caches' pytree.
+
+    Decode KV caches shard their *sequence* dim on the model axis
+    (split-KV / FlashDecoding layout); SSM states shard d_inner (TP).
+    """
+
+    def attn_axes():
+        a = ("layers", "batch", "kv_seq", None, None)
+        if cfg.kv_quant:
+            return attn_mod.QuantKVCache(k=a, v=a, k_scale=a, v_scale=a)
+        return attn_mod.KVCache(k=a, v=a)
+
+    def mla_axes():
+        return mla.MLACache(c_kv=("layers", "batch", "kv_seq", None),
+                            k_rope=("layers", "batch", "kv_seq", None))
+
+    def ssm_axes():
+        return mamba.MambaCache(conv=("layers", "batch", None, "model"),
+                                ssm=("layers", "batch", "model", None))
+
+    def block_axes():
+        if cfg.block == "mamba":
+            return blocks.BlockCache(kv=(), ssm=ssm_axes())
+        if cfg.block == "hymba":
+            return blocks.BlockCache(kv=attn_axes(), ssm=ssm_axes())
+        if cfg.attn_impl == "mla":
+            return blocks.BlockCache(kv=mla_axes(), ssm=())
+        return blocks.BlockCache(kv=attn_axes(), ssm=())
+
+    axes: dict = {}
+    if cfg.n_cross_layers:
+        grouped = jax.tree.map(
+            lambda a: (None, *a),
+            block_axes(),
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x) and len(x) > 0)
+        axes["self"] = grouped
+        axes["cross"] = attn_mod.KVCache(
+            k=(None, "batch", "kv_seq", None, None),
+            v=(None, "batch", "kv_seq", None, None))
+    else:
+        if cfg.first_dense:
+            axes["dense"] = block_axes()
+        axes["blocks"] = block_axes()
+    return axes
+
+
+def decode_step(p, cfg, tokens, caches, pos, *, constrain=None):
+    """One decode step. tokens [B,1] (or [B,1,K]); pos scalar int32.
+
+    Returns (logits [B,1,V...], new_caches).
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    cst = constrain or (lambda v, axes: v)
+    if cfg.n_codebooks:
+        h = _audio_embed(p, cfg, tokens, dt)
+    else:
+        h = embed_tokens(p, cfg, tokens, dt)
+    h = cst(h, ("batch", "act_seq", None))
+    new_caches: dict = {}
+
+    def layer_fn(h, lp, cache, moe_layer):
+        h2, new_cache, _ = blocks.block(
+            lp, h, cfg, mode="decode", cache=cache, pos=pos,
+            moe_layer=moe_layer, constrain=constrain, dt=dt)
+        return cst(h2, ("batch", "act_seq", None)), new_cache
+
+    if cfg.n_cross_layers:
+        g = cfg.group_self
+        sp = jax.tree.map(
+            lambda x: x.reshape(cfg.n_cross_layers, g, *x.shape[1:]),
+            p["self_blocks"])
+
+        def group_fn(h, xs):
+            cross_p, self_p, self_c, cross_c = xs
+            # decode-time cross attention reuses the prefilled cross K/V
+            hn = layers.rmsnorm(cross_p["norm1"], h, cfg.rms_eps)
+            q = jnp.einsum("btd,dnh->btnh", hn, cross_p["attn"]["wq"].astype(dt))
+            n_rep = cfg.n_heads // cfg.n_kv_heads
+            y = attn_mod._sdpa(q, cross_c.k, cross_c.v, None, n_rep)
+            y = jnp.einsum("btnh,nhd->btd", y, cross_p["attn"]["wo"].astype(dt))
+            h = h + y
+            hn = layers.rmsnorm(cross_p["norm2"], h, cfg.rms_eps)
+            h = h + layers.ffn(cross_p["ffn"], hn, cfg.ffn, compute_dtype=dt)
+
+            def inner(h, xs2):
+                lp, c = xs2
+                return layer_fn(h, lp, c, False)
+
+            h, new_c = _scan(inner, h, (self_p, self_c), unroll=cfg.unroll_scans)
+            return h, new_c
+
+        h, new_self = jax.lax.scan(
+            group_fn, h, (p["cross_blocks"], sp, caches["self"], caches["cross"]))
+        new_caches["self"] = new_self
+        new_caches["cross"] = caches["cross"]
+    else:
+        if cfg.first_dense:
+            def dense_fn(h, xs):
+                lp, c = xs
+                return layer_fn(h, lp, c, False)
+
+            h, ndc = _scan(dense_fn, h, (p["dense_blocks"], caches["dense"]), unroll=cfg.unroll_scans)
+            new_caches["dense"] = ndc
+
+        def moe_fn(h, xs):
+            lp, c = xs
+            return layer_fn(h, lp, c, cfg.is_moe)
+
+        h, nc = _scan(moe_fn, h, (p["blocks"], caches["blocks"]), unroll=cfg.unroll_scans)
+        new_caches["blocks"] = nc
+
+    h = layers.rmsnorm(p["final_norm"], h, cfg.rms_eps)
+    logits = logits_fn(p, cfg, h, dt)
+    return logits, new_caches

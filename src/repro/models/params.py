@@ -1,0 +1,79 @@
+"""Declarative parameter system.
+
+Models are described as trees of ``ParamSpec`` leaves (shape + logical
+sharding + init recipe). From one declaration we derive:
+
+  - concrete initialised parameters (``init_params``),
+  - abstract ShapeDtypeStructs for AOT lowering (``abstract_params``) —
+    the dry-run never allocates a single weight,
+  - PartitionSpec trees for pjit in/out shardings (``pspecs``),
+  - stacked per-layer variants for scan-over-layers (``stack``).
+
+Logical axis names are resolved to mesh axes by repro.dist.sharding rules.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: tuple          # logical axis name (or None) per dim
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # stddev; default fan-in scaled
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tmap(f, tree):
+    return jax.tree.map(f, tree, is_leaf=is_spec)
+
+
+def abstract_params(tree, dtype=jnp.float32):
+    return _tmap(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree)
+
+
+def logical_axes(tree):
+    return _tmap(lambda s: s.axes, tree)
+
+
+def stack(tree, n: int):
+    """Prepend a layer dimension (for scan-over-layers stacking)."""
+    return _tmap(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.axes), s.init, s.scale),
+        tree,
+    )
+
+
+def init_params(tree, key, dtype=jnp.float32):
+    """Materialise parameters; per-leaf keys are folded from the tree path."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_spec)
+    leaves = []
+    for i, (path, spec) in enumerate(flat):
+        k = jax.random.fold_in(key, i)
+        if spec.init == "zeros":
+            v = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            v = jnp.ones(spec.shape, dtype)
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = spec.scale if spec.scale is not None else fan_in ** -0.5
+            v = (jax.random.normal(k, spec.shape) * std).astype(dtype)
+        leaves.append(v)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def count_params(tree) -> int:
+    flat = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    total = 0
+    for s in flat:
+        n = 1
+        for d in (s.shape if is_spec(s) else s.shape):
+            n *= d
+        total += n
+    return total

@@ -1,0 +1,39 @@
+"""scan-or-unroll helper.
+
+`lax.scan` keeps compiled HLO size depth-independent, but XLA's
+cost_analysis counts a while-loop body ONCE regardless of trip count, so
+FLOP/byte/collective accounting from a scanned program under-reports by
+the trip count. The dry-run therefore compiles *analysis variants* with
+``cfg.unroll_scans=True`` — identical algorithm, scans unrolled as Python
+loops — at 1 and 2 layers, and extrapolates linearly in depth
+(homogeneous stacks make this exact). See EXPERIMENTS §Roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scan(f, init, xs, *, unroll: bool = False):
+    """Drop-in for jax.lax.scan(f, init, xs) with optional full unroll."""
+    if not unroll:
+        return jax.lax.scan(f, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    if n == 0:  # empty stack (e.g. 0 MoE layers in an analysis variant)
+        xi = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), xs)
+        _, y_shape = jax.eval_shape(f, init, xi)
+        ys0 = jax.tree.map(
+            lambda s: jnp.zeros((0, *s.shape), s.dtype), y_shape)
+        return init, ys0
+    carry = init
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    first_leaves = jax.tree.leaves(ys[0])
+    if not first_leaves:
+        return carry, ys[0]
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked

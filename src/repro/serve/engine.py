@@ -1,0 +1,134 @@
+"""Serving engine: slot-based continuous batching over the jitted
+prefill/decode steps.
+
+Requests enter a fixed pool of B slots; prefill computes the prompt's KV
+(state) which is spliced into the slot's region of the batched cache;
+every engine step decodes one token for all live slots; finished slots
+free immediately for the next queued request (continuous batching).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_mod
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # int32 [T] (or [T,K] audio)
+    max_new: int = 16
+    tokens_out: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, max_batch: int = 4, cache_len: int = 128,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.B = max_batch
+        self.cache_len = cache_len
+        self.caches = model_mod.init_caches(cfg, max_batch, cache_len)
+        self.slot_req: list[Request | None] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, np.int32)   # next position
+        self.queue: list[Request] = []
+        self.finished: dict[int, Request] = {}
+        self._next_rid = 0
+
+        self._decode = jax.jit(
+            lambda p, tok, caches, pos: model_mod.decode_step(
+                p, cfg, tok, caches, pos))
+
+    # -- client API --------------------------------------------------------
+    def submit(self, prompt, max_new: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        return rid
+
+    def result(self, rid: int) -> Request | None:
+        return self.finished.get(rid)
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    # -- scheduling --------------------------------------------------------
+    def _admit(self):
+        for slot in range(self.B):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into_slot(slot, req)
+
+    def _prefill_into_slot(self, slot: int, req: Request):
+        """Prompt tokens run through decode steps into this slot's cache.
+
+        (Single-slot prefill-by-decode keeps the engine simple and exactly
+        consistent with the decode path; bulk prefill would jit
+        forward(mode='prefill') and splice — see launch/serve.py.)
+        """
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = 0
+        for t, tok in enumerate(req.prompt[:-1]):
+            self._step_slot(slot, int(tok), emit=False)
+        # last prompt token emits the first generated token
+        self._step_slot(slot, int(req.prompt[-1]), emit=True)
+
+    def _step_slot(self, slot: int, token: int, emit: bool):
+        cfg = self.cfg
+        tok_shape = (self.B, 1, cfg.n_codebooks) if cfg.n_codebooks else (self.B, 1)
+        toks = np.zeros(tok_shape, np.int32)
+        toks[slot] = token
+        pos = jnp.int32(int(self.slot_pos[slot]))
+        logits, new_caches = self._decode(self.params, jnp.asarray(toks),
+                                          self.caches, pos)
+        # merge only this slot's cache rows (positions differ per slot)
+        self.caches = _merge_slot(self.caches, new_caches, slot, batch=self.B)
+        self.slot_pos[slot] += 1
+        if emit:
+            req = self.slot_req[slot]
+            nxt = int(np.asarray(jnp.argmax(logits[slot, -1], axis=-1)).reshape(-1)[0])
+            req.tokens_out.append(nxt)
+
+    def step(self):
+        """One engine tick: admit from queue, decode all live slots."""
+        self._admit()
+        for slot in range(self.B):
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            last = req.tokens_out[-1]
+            self._step_slot(slot, last, emit=True)
+            if len(req.tokens_out) >= req.max_new:
+                req.done = True
+                self.finished[req.rid] = req
+                self.slot_req[slot] = None
+
+    def run_until_drained(self, max_ticks: int = 1000):
+        ticks = 0
+        while (self.queue or self.active) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return ticks
+
+
+def _merge_slot(old, new, slot: int, batch: int | None = None):
+    """Take slot `slot`'s rows from `new`, keep others from `old`.
+
+    Cache layout: batch dim is index 1 ([L, B, ...]) except grouped VLM
+    self-caches ([G, g, B, ...]) where it is index 2.
+    """
+    if batch is None:
+        batch = max(x.shape[1] for x in jax.tree.leaves(new))
+
+    def merge(o, n):
+        if o.ndim >= 2 and o.shape[1] == batch:
+            return o.at[:, slot].set(n[:, slot])
+        return o.at[:, :, slot].set(n[:, :, slot])
+
+    return jax.tree.map(merge, old, new)

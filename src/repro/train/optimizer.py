@@ -1,0 +1,79 @@
+"""AdamW with global-norm clipping, cosine schedule, and configurable
+moment dtype (bf16 moments keep the 235B-MoE optimizer inside v5e HBM —
+see EXPERIMENTS §Dry-run). Optimizer state inherits parameter shardings
+(params are already FSDP+TP sharded, i.e. ZeRO-3-style)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def init(params, moments_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moments_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def abstract_state(abstract_params, moments_dtype=jnp.float32) -> AdamWState:
+    """ShapeDtypeStruct mirror of init() for AOT lowering."""
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, moments_dtype,
+                                       sharding=getattr(p, "sharding", None))
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(z, abstract_params),
+        v=jax.tree.map(z, abstract_params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def cosine_lr(step, *, peak: float, warmup: int = 100, total: int = 10000,
+              floor: float = 0.1):
+    warm = peak * (step + 1) / warmup
+    frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+
+
+def update(params, grads, state: AdamWState, *, lr, weight_decay=0.1,
+           b1=0.9, b2=0.95, eps=1e-8, clip=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip / (gnorm + 1e-9))
+    step = state.step + 1
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        delta = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps) + weight_decay * p.astype(jnp.float32)
+        return (
+            (p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+            m32.astype(m.dtype),
+            v32.astype(v.dtype),
+        )
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm,
+        "clip_scale": scale,
+    }

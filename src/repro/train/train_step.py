@@ -1,0 +1,104 @@
+"""The jitted training step: loss -> grads (remat, microbatched) ->
+clipped AdamW update. Factory-style so the distribution layer can inject
+sharding constraints and the dry-run can lower it AOT."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_mod
+from repro.train import optimizer
+
+
+def remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if name == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    raise ValueError(f"unknown remat policy {name!r}")
+
+
+def make_train_step(cfg, run, mesh=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    cst = None
+    if mesh is not None:
+        from repro.dist import sharding
+
+        cst = sharding.make_constrain(mesh, run.profile)
+    policy = remat_policy(run.remat)
+    use_remat = run.remat != "none"
+
+    def loss(params, batch):
+        return model_mod.loss_fn(
+            params, cfg, batch, constrain=cst,
+            remat_policy=policy if use_remat else None)
+
+    def grads_fn(params, batch):
+        if run.microbatches <= 1:
+            return jax.value_and_grad(loss)(params, batch)
+
+        m = run.microbatches
+
+        def split(x):
+            return x.reshape(m, x.shape[0] // m, *x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, mb_i):
+            acc_loss, acc_g = carry
+            l, g = jax.value_and_grad(loss)(params, mb_i)
+            acc_g = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+            return (acc_loss + l, acc_g), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (total_l, total_g), _ = jax.lax.scan(body, (0.0, zero_g), mb)
+        scale = 1.0 / m
+        return total_l * scale, jax.tree.map(lambda g: g * scale, total_g)
+
+    def train_step(params, opt_state, batch):
+        l, grads = grads_fn(params, batch)
+        lr = optimizer.cosine_lr(opt_state.step, peak=run.learning_rate,
+                                 warmup=run.lr_warmup)
+        params, opt_state, metrics = optimizer.update(
+            params, grads, opt_state, lr=lr,
+            weight_decay=run.weight_decay, clip=run.grad_clip)
+        metrics["loss"] = l
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, mesh=None, profile: str = "default"):
+    cst = None
+    if mesh is not None:
+        from repro.dist import sharding
+
+        cst = sharding.make_constrain(mesh, profile)
+
+    def prefill_step(params, tokens, vision_embeds=None):
+        out = model_mod.forward(params, cfg, tokens, mode="prefill",
+                                vision_embeds=vision_embeds, constrain=cst)
+        return out.logits[:, -1:], out.caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg, mesh=None, profile: str = "default"):
+    cst = None
+    if mesh is not None:
+        from repro.dist import sharding
+
+        cst = sharding.make_constrain(mesh, profile)
+
+    def decode_step(params, tokens, caches, pos):
+        return model_mod.decode_step(params, cfg, tokens, caches, pos,
+                                     constrain=cst)
+
+    return decode_step

@@ -1,0 +1,70 @@
+"""FlashAttention Pallas kernel vs jnp oracle: shape/dtype/block sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention
+
+
+def _rand(b, h, t, d, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda: jnp.asarray(rng.normal(size=(b, h, t, d)).astype(np.float32) * 0.5)
+    return mk().astype(dtype), mk().astype(dtype), mk().astype(dtype)
+
+
+TOLS = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,block_q,block_k", [
+    (128, 128, 128), (256, 128, 128), (256, 64, 128), (512, 128, 64),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(dtype, t, block_q, block_k, causal):
+    q, k, v = _rand(2, 3, t, 64, dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=block_q,
+                          block_k=block_k, interpret=True)
+    want = kref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **TOLS[dtype])
+
+
+@pytest.mark.parametrize("d", [32, 64, 128])
+def test_flash_head_dims(d):
+    q, k, v = _rand(1, 2, 128, d, jnp.float32, seed=d)
+    got = flash_attention(q, k, v, interpret=True)
+    want = kref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t_blocks=st.integers(1, 4),
+    h=st.integers(1, 3),
+    seed=st.integers(0, 100),
+)
+def test_flash_property(t_blocks, h, seed):
+    t = 64 * t_blocks
+    q, k, v = _rand(1, h, t, 32, jnp.float32, seed=seed)
+    got = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = kref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_causality():
+    """Future tokens must not influence outputs."""
+    q, k, v = _rand(1, 1, 128, 32, jnp.float32)
+    out1 = flash_attention(q, k, v, interpret=True)
+    k2 = k.at[:, :, 100:].set(99.0)  # perturb only future keys
+    v2 = v.at[:, :, 100:].set(99.0)
+    out2 = flash_attention(q, k2, v2, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :, :100]),
+                               np.asarray(out2[:, :, :100]), rtol=1e-6)

@@ -1,0 +1,48 @@
+"""Device-pipeline runtime test (5 forced host devices via subprocess —
+the main pytest session must keep the default single device)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=5"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import alphabet as ab
+    from repro.core import corpus, stemmer
+    from repro.dist import pipeline
+
+    mesh = jax.make_mesh((5,), ("stage",))
+    roots = corpus.build_dictionary(n_tri=400, n_quad=50)
+    da = stemmer.RootDictArrays.from_rootdict(roots)
+    words, _, _ = corpus.build_corpus(n_words=32, seed=4)
+    enc = jnp.asarray(corpus.encode_corpus(words))
+    m, mb = 4, 8
+    bundle = {
+        "words": enc.reshape(m, mb, ab.MAXLEN),
+        "keys": jnp.zeros((m, mb, 32), jnp.int32),
+        "valid": jnp.zeros((m, mb, 32), jnp.int32),
+        "root": jnp.zeros((m, mb, 4), jnp.int32),
+        "source": jnp.zeros((m, mb), jnp.int32),
+    }
+    out = pipeline.pipeline_map(pipeline.stemmer_stage_fns(da), bundle, mesh,
+                                axis="stage")
+    ref_roots, ref_src = stemmer.stem_batch(enc, da)
+    np.testing.assert_array_equal(
+        np.asarray(out["root"]).reshape(-1, 4), np.asarray(ref_roots))
+    np.testing.assert_array_equal(
+        np.asarray(out["source"]).reshape(-1), np.asarray(ref_src))
+    print("PIPELINE_OK")
+""")
+
+
+def test_pipeline_map_five_stages():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert "PIPELINE_OK" in proc.stdout, proc.stderr[-2000:]

@@ -1,0 +1,87 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import alphabet as ab
+from repro.core import corpus, pyref, stemmer
+
+ARABIC_LETTERS = [chr(cp) for cp, c in ab.CP_TO_CODE.items() if c]
+
+
+@st.composite
+def arabic_words(draw, min_size=1, max_size=15):
+    n = draw(st.integers(min_size, max_size))
+    return "".join(draw(st.sampled_from(ARABIC_LETTERS)) for _ in range(n))
+
+
+@settings(max_examples=60, deadline=None)
+@given(arabic_words())
+def test_encode_decode_roundtrip_property(word):
+    enc = ab.encode_word(word)
+    assert ab.decode_word(enc) == ab.normalise(word)[:15]
+    assert enc.shape == (ab.MAXLEN,)
+    assert (enc >= 0).all() and (enc < ab.N_CODES).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 63), min_size=0, max_size=4))
+def test_pack_key_bijective_property(codes):
+    k = ab.pack_key(codes)
+    assert 0 <= k < 2**24
+    assert ab.unpack_key(k) == (list(codes) + [0] * 4)[:4]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_root_fixed_point_property(seed):
+    """Stemming a trilateral dictionary root returns the root itself:
+    the (no-prefix, no-suffix) candidate is first in priority order."""
+    d = corpus.build_dictionary(n_tri=400, n_quad=50, seed=3)
+    tris = sorted(d.tri)
+    root = tris[seed % len(tris)]
+    got, src = pyref.extract_root(list(root), d)
+    assert got == root
+    assert src == pyref.SRC_TRI
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 48))
+def test_jax_pyref_agree_on_random_words(seed, n):
+    """The vectorised implementation equals the oracle on arbitrary
+    (not just conjugated) letter strings — garbage in, same answer out."""
+    rng = np.random.default_rng(seed)
+    d = corpus.build_dictionary(n_tri=300, n_quad=40, seed=9)
+    da = stemmer.RootDictArrays.from_rootdict(d)
+    lens = rng.integers(1, 15, size=n)
+    words = ["".join(rng.choice(ARABIC_LETTERS, ln)) for ln in lens]
+    enc = corpus.encode_corpus(words)
+    roots_jax, src_jax = stemmer.stem_batch(enc, da)
+    roots_jax, src_jax = np.asarray(roots_jax), np.asarray(src_jax)
+    for i in range(n):
+        want_root, want_src = pyref.extract_root(enc[i], d)
+        got = tuple(int(c) for c in roots_jax[i] if c)
+        assert got == want_root, words[i]
+        assert int(src_jax[i]) == want_src, words[i]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_source_tags_consistent_with_dict_membership(seed):
+    """Whatever source the stemmer reports, the returned root must be a
+    member of the dictionary the tag claims it came from."""
+    rng = np.random.default_rng(seed)
+    d = corpus.build_dictionary(n_tri=300, n_quad=40, seed=11)
+    words, _, _ = corpus.build_corpus(n_words=40, seed=seed % 1000)
+    for w in words:
+        root, src = pyref.stem_word(w, d, extended=True)
+        enc = tuple(int(c) for c in ab.encode_word(root) if c)
+        if src in (pyref.SRC_TRI, pyref.SRC_RESTORED, pyref.SRC_DEINFIX_TRI,
+                   pyref.SRC_EXT_DEFECTIVE, pyref.SRC_EXT_HOLLOW_Y):
+            assert enc in d.tri
+        elif src == pyref.SRC_QUAD:
+            assert enc in d.quad
+        elif src == pyref.SRC_DEINFIX_BI:
+            assert enc in d.bi
+        else:
+            assert src == pyref.SRC_NONE and root == ""

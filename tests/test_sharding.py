@@ -1,0 +1,96 @@
+"""Sharding resolver unit tests (no multi-device requirements)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.dist import sharding
+from repro.models import model as model_mod
+from repro.models import params as pm
+
+
+class FakeMesh:
+    """Duck-typed mesh: resolve() only reads axis_names + devices.shape."""
+
+    def __init__(self, sizes: dict):
+        self.axis_names = tuple(sizes)
+        import numpy as np
+
+        self.devices = np.empty(tuple(sizes.values()))
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisible_dims_shard():
+    spec = sharding.resolve(("fsdp", "model"), (4096, 14336), MESH1)
+    assert spec == P("data", "model")
+
+
+def test_indivisible_head_dim_replicates():
+    # 25 heads (hymba) cannot shard on model=16
+    spec = sharding.resolve(("fsdp", "heads", None), (1600, 25, 64), MESH1)
+    assert spec == P("data", None, None)
+
+
+def test_batch_prefix_backoff():
+    # batch=16 on (data=16, pod=2): full group 32 doesn't divide, prefix does
+    spec = sharding.resolve(("batch", None), (16, 128), MESH2)
+    assert spec == P("data", None)
+
+
+def test_batch_one_replicates():
+    spec = sharding.resolve(("batch", None), (1, 128), MESH2)
+    assert spec == P(None, None)
+
+
+def test_axis_uniqueness():
+    # experts takes model; a later "model" dim must not reuse it
+    spec = sharding.resolve(("experts", "fsdp", "model"), (128, 2048, 1536), MESH1)
+    assert spec == P("model", "data", None)
+
+
+def test_multi_pod_fsdp_uses_both_axes():
+    spec = sharding.resolve(("fsdp", "model"), (4096, 14336), MESH2)
+    assert spec == P(("data", "pod"), "model")
+
+
+def test_kv_seq_on_model():
+    spec = sharding.resolve(("layers", "batch", "kv_seq", None, None),
+                            (32, 128, 32768, 8, 128), MESH1)
+    assert spec == P(None, "data", "model", None, None)
+
+
+@pytest.mark.parametrize("arch", sorted(configs.ARCHS))
+def test_param_specs_resolve_for_all_archs(arch):
+    """Every parameter of every full config resolves on both meshes."""
+    cfg = configs.get_config(arch)
+    spec = model_mod.model_spec(cfg)
+    flat = jax.tree.leaves(spec, is_leaf=pm.is_spec)
+    for mesh in (MESH1, MESH2):
+        for s in flat:
+            p = sharding.resolve(s.axes, s.shape, mesh)
+            # every sharded dim must divide
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            for dim, entry in zip(s.shape, p):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                prod = 1
+                for a in axes:
+                    prod *= sizes[a]
+                assert dim % prod == 0, (arch, s.shape, p)
+
+
+def test_cache_axes_structure_matches_all_archs():
+    """cache_logical_axes must stay in lock-step with init_caches."""
+    for arch in sorted(configs.ARCHS):
+        cfg = configs.smoke_config(configs.get_config(arch))
+        shapes = jax.eval_shape(lambda c=cfg: model_mod.init_caches(c, 2, 16))
+        axes = model_mod.cache_logical_axes(cfg)
+        is_axes = lambda x: isinstance(x, tuple) and len(x) > 0 and all(
+            isinstance(e, (str, type(None))) for e in x)
+        n_shapes = len(jax.tree.leaves(shapes))
+        n_axes = len(jax.tree.flatten(axes, is_leaf=is_axes)[0])
+        assert n_shapes == n_axes, arch
