@@ -1,16 +1,17 @@
 """Paper §6.4 complexity discussion, realised: the Compare stage as
 (a) linear comparator-bank scan (the paper's hardware, our Pallas kernel
 path / dense backend) vs (b) the paper's proposed O(log R) tree search
-(sorted binary search), across dictionary sizes."""
+(sorted binary search — both the jnp searchsorted form and the in-kernel
+unrolled bisection the megakernel uses), across dictionary sizes."""
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import bench as _bench
 from repro.core import stemmer
+from repro.kernels import ops
 
 
 def match_unpacked(stems, roots):
@@ -19,7 +20,11 @@ def match_unpacked(stems, roots):
     return (stems[:, None, :] == roots[None, :, :]).all(-1).any(-1)
 
 
-def run(n_keys: int = 16384, dict_sizes=(512, 2048, 8192, 32768)):
+def run(n_keys: int = 16384, dict_sizes=(512, 2048, 8192, 32768),
+        pallas_max_r: int = 8192):
+    """Returns rows: {"name", "backend", "dict_size", "us_per_call",
+    "keys_per_s"}. Pallas rows run interpret-mode on CPU; the bank kernel
+    is O(N*R) so it is capped at pallas_max_r to keep the sweep bounded."""
     rng = np.random.default_rng(0)
     keys = jnp.asarray(rng.integers(0, 2**24, n_keys).astype(np.int32))
     stems = jnp.asarray(rng.integers(0, 64, (n_keys, 4)).astype(np.int32))
@@ -31,19 +36,33 @@ def run(n_keys: int = 16384, dict_sizes=(512, 2048, 8192, 32768)):
             ("unpacked", lambda: jax.jit(match_unpacked)(stems, droots)),
             ("dense", lambda: jax.jit(stemmer.match_dense)(keys, dk)),
             ("sorted", lambda: jax.jit(stemmer.match_sorted)(keys, dk)),
+            ("pallas_bsearch",
+             lambda: ops.dict_match(keys, dk, strategy="bsearch",
+                                    interpret=True)),
         ]
+        if r <= pallas_max_r:
+            cases.append(
+                ("pallas_bank",
+                 lambda: ops.dict_match(keys, dk, strategy="bank",
+                                        interpret=True)))
         for name, call in cases:
-            jax.block_until_ready(call())
-            t0 = time.perf_counter()
-            jax.block_until_ready(call())
-            dt = time.perf_counter() - t0
-            rows.append((name, r, n_keys / dt))
+            dt, _ = _bench(call, iters=2)
+            rows.append({
+                "name": f"{name}_R{r}",
+                "backend": name,
+                "dict_size": r,
+                "us_per_call": 1e6 * dt,
+                "keys_per_s": n_keys / dt,
+            })
     return rows
 
 
-def main():
-    for name, r, kps in run():
-        print(f"compare_{name}_R{r},{1e6 / kps:.4f},{kps/1e6:.2f}Mkeys_s")
+def main(**kw):
+    rows = run(**kw)
+    for r in rows:
+        kps = r["keys_per_s"]
+        print(f"compare_{r['name']},{1e6 / kps:.4f},{kps / 1e6:.2f}Mkeys_s")
+    return rows
 
 
 if __name__ == "__main__":

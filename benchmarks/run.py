@@ -1,20 +1,49 @@
 """Benchmark driver — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines:
-  throughput_*   Fig 16  (software vs non-pipelined vs pipelined Wps)
+  throughput_*   Fig 16  (software vs non-pipelined vs pipelined Wps,
+                          plus multi-launch vs megakernel backends)
   scaling_*      Fig 17  (throughput vs word count)
   table6_*       Table 6 (accuracy ± infix processing)
   table7_*       Table 7 (per-root accuracy, top-frequency roots)
   compare_*      §6.4    (Compare-stage: linear vs sorted search)
   roofline_*     §Roofline (from dry-run records, if present)
+
+Sections that return row dicts (throughput / scaling / compare_stage)
+are also persisted machine-readable to ``BENCH_stemmer.json`` so the
+perf trajectory is tracked across PRs (CI uploads it as an artifact).
+
+Flags:
+  --smoke        reduced sizes for CI (CPU, interpret-mode kernels)
+  --json PATH    where to write the JSON record (default
+                 ./BENCH_stemmer.json; "-" disables)
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import sys
 import traceback
+from pathlib import Path
+
+SMOKE_PARAMS = {
+    "throughput": dict(n_words=2048, seq_words=64),
+    "scaling": dict(sizes=(512, 2048)),
+    "accuracy": dict(n_words=2000),
+    "compare_stage": dict(n_keys=4096, dict_sizes=(512, 2048),
+                          pallas_max_r=2048),
+}
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI smoke runs")
+    ap.add_argument("--json", default="BENCH_stemmer.json",
+                    help='output path for the JSON record ("-" disables)')
+    args = ap.parse_args(argv)
+
     from benchmarks import accuracy_bench, compare_stage, roofline, scaling, throughput
 
     sections = [
@@ -24,14 +53,32 @@ def main() -> None:
         ("compare_stage", compare_stage.main),
         ("roofline", roofline.main),
     ]
+    record: dict = {"schema": 1, "smoke": args.smoke,
+                    "platform": platform.platform(), "sections": {}}
+    try:
+        import jax
+
+        record["jax"] = jax.__version__
+        record["backend"] = jax.default_backend()
+    except Exception:
+        pass
+
     failed = 0
     for name, fn in sections:
+        kw = SMOKE_PARAMS.get(name, {}) if args.smoke else {}
         try:
-            fn()
+            rows = fn(**kw)
         except Exception:
             failed += 1
             print(f"{name}_FAILED,0,see_stderr", flush=True)
             traceback.print_exc()
+            continue
+        if rows:
+            record["sections"][name] = rows
+
+    if args.json != "-":
+        Path(args.json).write_text(json.dumps(record, indent=1))
+        print(f"bench_json,0,{args.json}")
     if failed:
         sys.exit(1)
 

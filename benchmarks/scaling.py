@@ -5,11 +5,9 @@ fill amortises; here the analogue is jit/dispatch amortisation + steady
 microbatch streaming."""
 from __future__ import annotations
 
-import time
-
-import jax
 import jax.numpy as jnp
 
+from benchmarks.timing import bench as _bench
 from repro.core import corpus, stemmer
 
 
@@ -20,17 +18,22 @@ def run(sizes=(512, 2048, 8192, 32768), backend="sorted"):
     for n in sizes:
         words, _, _ = corpus.build_corpus(n_words=n, seed=1)
         enc = jnp.asarray(corpus.encode_corpus(words))
-        jax.block_until_ready(stemmer.stem_batch(enc, da, backend=backend))
-        t0 = time.perf_counter()
-        jax.block_until_ready(stemmer.stem_batch(enc, da, backend=backend))
-        dt = time.perf_counter() - t0
-        rows.append((n, n / dt))
+        dt, _ = _bench(stemmer.stem_batch, enc, da, backend=backend, iters=2)
+        rows.append({
+            "name": f"scaling_n{n}",
+            "backend": backend,
+            "n_words": n,
+            "us_per_call": 1e6 * dt,
+            "wps": n / dt,
+        })
     return rows
 
 
-def main():
-    for n, wps in run():
-        print(f"scaling_n{n},{1e6 / wps:.3f},{wps:.1f}Wps")
+def main(**kw):
+    rows = run(**kw)
+    for r in rows:
+        print(f"{r['name']},{1e6 / r['wps']:.3f},{r['wps']:.1f}Wps")
+    return rows
 
 
 if __name__ == "__main__":

@@ -4,30 +4,42 @@
   non_pipelined  — batch-vectorised, all five stages barriered
   pipelined      — microbatched streaming (+ Pallas fused datapath)
 
+plus the kernel-backend shootout the megakernel PR targets:
+
+  kernel_multilaunch   — datapath kernel + 5 dict-match launches with
+                         HBM round-trips between stages (the
+                         pre-megakernel "fused" path)
+  kernel_fused_*       — ONE pallas_call for stages 1-5, dictionaries
+                         VMEM-resident, Compare = comparator bank or
+                         in-kernel sorted search (stem_fused.py)
+
 The paper reports 373.3 Wps (software), 2.08 MWps (non-pipelined, 5571x)
 and 10.78 MWps (pipelined, 28873x). Absolute Wps here are CPU-host
-numbers; the *ratios* reproduce the paper's ordering.
+numbers (kernel rows run interpret-mode on CPU); the *ratios* reproduce
+the paper's ordering.
 """
 from __future__ import annotations
 
-import time
-
 import jax
-import numpy as np
 
+from benchmarks.timing import bench as _bench
 from repro.core import corpus, stemmer
+from repro.kernels import ops
 
 
-def _bench(fn, *args, warmup=1, iters=3, **kw):
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args, **kw))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = jax.block_until_ready(fn(*args, **kw))
-    return (time.perf_counter() - t0) / iters, out
+def _row(name, backend, n, dt, sw_wps):
+    wps = n / dt
+    return {
+        "name": name,
+        "backend": backend,
+        "us_per_call": 1e6 * dt,
+        "wps": wps,
+        "speedup_vs_software": wps / sw_wps,
+    }
 
 
-def run(n_words: int = 8192, seq_words: int = 512, backend: str = "sorted"):
+def run(n_words: int = 8192, seq_words: int = 512, backend: str = "sorted",
+        kernel_rows: bool = True):
     words, _, _ = corpus.build_corpus(n_words=n_words, seed=0)
     enc = jax.numpy.asarray(corpus.encode_corpus(words))
     d = corpus.build_dictionary()
@@ -38,22 +50,42 @@ def run(n_words: int = 8192, seq_words: int = 512, backend: str = "sorted"):
     t_sw, _ = _bench(stemmer.stem_sequential, enc[:seq_words], da,
                      backend=backend)
     sw_wps = seq_words / t_sw
-    rows.append(("software", sw_wps, 1.0))
+    rows.append(_row("software", backend, seq_words, t_sw, sw_wps))
 
     t_np, _ = _bench(stemmer.stem_batch, enc, da, backend=backend)
-    np_wps = n_words / t_np
-    rows.append(("non_pipelined", np_wps, np_wps / sw_wps))
+    rows.append(_row("non_pipelined", backend, n_words, t_np, sw_wps))
 
     t_pl, _ = _bench(stemmer.stem_pipelined, enc, da, backend=backend,
                      microbatch=4096)
-    pl_wps = n_words / t_pl
-    rows.append(("pipelined", pl_wps, pl_wps / sw_wps))
+    rows.append(_row("pipelined", backend, n_words, t_pl, sw_wps))
+
+    if kernel_rows:
+        # the megakernel acceptance comparison: one launch vs six
+        t_ml, _ = _bench(ops.extract_roots_multilaunch, enc, da,
+                         interpret=True, iters=1)
+        rows.append(_row("kernel_multilaunch", "pallas", n_words, t_ml, sw_wps))
+        for match in ("bank", "bsearch"):
+            t_f, _ = _bench(ops.extract_roots_fused, enc, da, match=match,
+                            interpret=True, iters=2)
+            rows.append(
+                _row(f"kernel_fused_{match}", "fused", n_words, t_f, sw_wps))
+
     return rows
 
 
-def main():
-    for name, wps, speedup in run():
-        print(f"throughput_{name},{1e6 / wps:.3f},{wps:.1f}Wps_x{speedup:.1f}")
+def main(**kw):
+    rows = run(**kw)
+    for r in rows:
+        # CSV column 2 stays us-per-word (1e6/Wps) as in every section;
+        # the JSON rows carry the whole-batch us_per_call separately.
+        print(f"throughput_{r['name']},{1e6 / r['wps']:.3f},"
+              f"{r['wps']:.1f}Wps_x{r['speedup_vs_software']:.1f}")
+    by_name = {r["name"]: r for r in rows}
+    if "kernel_multilaunch" in by_name and "kernel_fused_bsearch" in by_name:
+        ratio = (by_name["kernel_fused_bsearch"]["wps"]
+                 / by_name["kernel_multilaunch"]["wps"])
+        print(f"throughput_fused_vs_multilaunch,{0:.3f},x{ratio:.2f}")
+    return rows
 
 
 if __name__ == "__main__":

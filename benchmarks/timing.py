@@ -1,0 +1,18 @@
+"""Shared warmup-then-time helper for all benchmark sections."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def bench(fn, *args, warmup=1, iters=3, **kw):
+    """Mean seconds/call over ``iters`` timed calls after ``warmup``
+    untimed ones (compile + cache fill). Returns (seconds, last_output)."""
+    out = None
+    for _ in range(warmup):
+        out = jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / iters, out

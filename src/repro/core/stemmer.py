@@ -144,11 +144,15 @@ def _match(keys, dict_keys, backend: str):
         return match_dense(keys, dict_keys)
     if backend == "sorted":
         return match_sorted(keys, dict_keys)
-    if backend == "pallas":
+    if backend in ("pallas", "fused"):
         from repro.kernels import ops  # lazy: kernels depend on core
 
+        # "fused" reaching stage 5 in isolation (e.g. through the extended
+        # rule pool) uses the megakernel's in-kernel sorted search.
+        strategy = "bsearch" if backend == "fused" else "bank"
         shape = keys.shape
-        return ops.dict_match(keys.reshape(-1), dict_keys).reshape(shape)
+        return ops.dict_match(
+            keys.reshape(-1), dict_keys, strategy=strategy).reshape(shape)
     raise ValueError(f"unknown match backend: {backend}")
 
 
@@ -168,7 +172,20 @@ def extract_roots(
 
     source uses pyref.SRC_* tags; root rows are zero-padded char codes.
     extended=True adds the beyond-paper rule pool (final ى→ي, hollow ا→ي).
+
+    backend selects the Compare stage implementation: "dense" / "sorted"
+    (pure jnp), "pallas" (tiled comparator-bank kernel) or "fused" — the
+    single-launch stage 1-5 megakernel with VMEM-resident dictionaries
+    (kernels/stem_fused.py; paper-exact, no intermediate HBM tensors).
+    The extended rule pool is not in the megakernel's candidate grid, so
+    extended=True keeps the staged path and uses the megakernel's
+    in-kernel sorted search for stage 5 only.
     """
+    if backend == "fused" and not extended:
+        from repro.kernels import ops  # lazy: kernels depend on core
+
+        return ops.extract_roots_fused(words, roots, infix=infix)
+
     tri, tri_valid, quad, quad_valid = generate_stems(words)
     infix_codes = jnp.asarray(ab.INFIX_CODES)
 

@@ -38,27 +38,35 @@ def synthetic_lm_batches(vocab: int, batch: int, seq: int, seed: int = 0,
 
 
 class MorphPreprocessor:
-    """Batched root extraction as a pipeline operator."""
+    """Batched root extraction as a pipeline operator.
+
+    backend is any core.stemmer Compare backend ("sorted" / "dense" /
+    "pallas" / "fused" — the last runs the single-launch stage 1-5
+    megakernel, see kernels/stem_fused.py).
+    """
 
     def __init__(self, n_tri=2000, n_quad=200, backend="sorted", seed=0):
         self.rootdict = corpus_mod.build_dictionary(n_tri, n_quad, seed)
         self.arrays = stemmer.RootDictArrays.from_rootdict(self.rootdict)
         self.backend = backend
-        # root id table: packed key -> dense id
+        # root id table: sorted packed keys; id == searchsorted rank + 1
         keys = sorted(
             {ab.pack_key(r) for r in self.rootdict.tri}
             | {ab.pack_key(r) for r in self.rootdict.quad}
             | {ab.pack_key(r) for r in self.rootdict.bi})
-        self._key_to_id = {k: i + 1 for i, k in enumerate(keys)}  # 0 = none
+        self._id_keys = np.asarray(keys, np.int64)  # sorted, 0 = none
         self.n_roots = len(keys) + 1
 
     def __call__(self, words: list[str]):
         """words -> (char_tokens int32[B,16], root_ids int32[B])."""
         enc = corpus_mod.encode_corpus(words)
         roots, _src = stemmer.stem_batch(enc, self.arrays, backend=self.backend)
-        roots = np.asarray(roots)
+        roots = np.asarray(roots).astype(np.int64)
         keys = ((roots[:, 0] * 64 + roots[:, 1]) * 64 + roots[:, 2]) * 64 + roots[:, 3]
-        ids = np.array([self._key_to_id.get(int(k), 0) for k in keys], np.int32)
+        # vectorised key -> dense id: rank lookup in the sorted key table
+        idx = np.searchsorted(self._id_keys, keys)
+        idx_c = np.minimum(idx, len(self._id_keys) - 1)
+        ids = np.where(self._id_keys[idx_c] == keys, idx_c + 1, 0).astype(np.int32)
         return enc, ids
 
 

@@ -1,0 +1,7 @@
+"""Distribution substrate: stage pipelining, sharding rules, grad compression.
+
+  pipeline     single-host/device-mesh microbatched stage pipeline — the
+               paper's pipelined processor mapped onto a mesh axis
+  sharding     logical-axis -> mesh-axis resolver for the ParamSpec system
+  compression  int8 error-feedback gradient compression
+"""

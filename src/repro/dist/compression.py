@@ -1,0 +1,40 @@
+"""Int8 gradient compression with error feedback.
+
+Cross-host gradient all-reduce is the bandwidth bottleneck when the
+stemmer-LM trains over slow interconnect; symmetric int8 quantisation
+cuts the wire format 4x. The quantisation residual is carried forward
+and added to the next step's gradient (error feedback), which keeps the
+long-run average unbiased — the standard EF-SGD construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-30
+
+
+def quantise_tensor(x: jnp.ndarray):
+    """x float[...] -> (q int8[...] in [-127, 127], scale float scalar).
+
+    Symmetric round-to-nearest: x ~= q * scale, |x - q*scale| <= scale/2.
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, _EPS)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads, errors):
+    """One EF round over lists of tensors.
+
+    grads, errors: same-structure lists. Returns (dequantised, new
+    errors): each tensor is quantised *after* adding the carried error,
+    and the new error is exactly what the wire format lost this round.
+    """
+    deqs, new_errors = [], []
+    for g, e in zip(grads, errors):
+        target = g + e
+        q, scale = quantise_tensor(target)
+        dq = q.astype(g.dtype) * scale
+        deqs.append(dq)
+        new_errors.append(target - dq)
+    return deqs, new_errors

@@ -1,0 +1,64 @@
+"""Logical-axis -> mesh-axis resolver for the ParamSpec system.
+
+Model code names dimensions by *role* ("fsdp", "model", "batch", ...);
+this module maps roles onto whatever mesh the launcher built. Rules:
+
+  - each role has an ordered mesh-axis group; data-parallel roles
+    ("batch", "fsdp") span ("data", "pod") so multi-pod meshes shard the
+    full data-parallel group;
+  - a dimension shards on the longest group prefix whose device product
+    divides it (prefix backoff: a batch of 16 on data=16 x pod=2 falls
+    back from the 32-way group to 16-way "data"); otherwise it
+    replicates;
+  - mesh axes are used at most once per parameter ("experts" taking
+    "model" stops a later "model" dim from reusing it);
+  - group members absent from the mesh are skipped, so the same specs
+    resolve on single-pod and multi-pod meshes.
+
+Meshes are duck-typed: only ``axis_names`` and ``devices.shape`` are
+read, so tests can pass lightweight fakes.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# role -> ordered candidate mesh axes
+GROUPS = {
+    "batch": ("data", "pod"),
+    "fsdp": ("data", "pod"),
+    "model": ("model",),
+    "heads": ("model",),
+    "experts": ("model",),
+    "kv_seq": ("model",),
+    "vocab": ("model",),
+}
+# never sharded: scan/stack dims and per-feature vectors
+_REPLICATED = {"layers", "blocks", "cross_blocks", None}
+
+
+def resolve(axes, shape, mesh) -> P:
+    """(logical axes, dim sizes, mesh) -> PartitionSpec.
+
+    Every returned entry divides its dimension exactly; anything that
+    cannot shard cleanly replicates rather than erroring, so one spec
+    tree serves every mesh geometry.
+    """
+    sizes = dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+    used: set = set()
+    entries = []
+    for name, dim in zip(axes, shape):
+        group = GROUPS.get(name, ())
+        group = tuple(a for a in group if a in sizes and a not in used)
+        entry = None
+        for k in range(len(group), 0, -1):  # longest prefix first
+            prefix = group[:k]
+            prod = 1
+            for a in prefix:
+                prod *= sizes[a]
+            if prod > 1 and dim % prod == 0:
+                entry = prefix if k > 1 else prefix[0]
+                used.update(prefix)
+                break
+        entries.append(entry)
+    return P(*entries)

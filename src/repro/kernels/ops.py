@@ -7,6 +7,7 @@ code that pallas_call lowers for TPU. On TPU backends interpret=False.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +15,7 @@ import jax.numpy as jnp
 from repro.core import pyref
 from repro.kernels import ref as kref
 from repro.kernels import stem_datapath as sdp
+from repro.kernels import stem_fused as sf
 from repro.kernels import stem_match as sm
 
 
@@ -21,10 +23,23 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def dict_match(keys: jnp.ndarray, dict_keys: jnp.ndarray, **kw) -> jnp.ndarray:
-    """Membership of packed stem keys in a packed root dictionary."""
+def dict_match(keys: jnp.ndarray, dict_keys: jnp.ndarray, *,
+               strategy: str = "bank", **kw) -> jnp.ndarray:
+    """Membership of packed stem keys in a packed root dictionary.
+
+    strategy="bank"    tiled all-pairs compare (the paper's comparator
+                       banks; dict streamed tile-by-tile over the grid)
+    strategy="bsearch" in-kernel unrolled binary search over the sorted
+                       dictionary (the paper's §7 tree-search upgrade;
+                       dict VMEM-resident)
+    """
     kw.setdefault("interpret", _interpret_default())
-    return sm.dict_match_pallas(keys, dict_keys, **kw)
+    if strategy == "bank":
+        return sm.dict_match_pallas(keys, dict_keys, **kw)
+    if strategy == "bsearch":
+        kw.pop("block_r", None)  # bsearch holds the whole dict resident
+        return sm.dict_match_bsearch_pallas(keys, dict_keys, **kw)
+    raise ValueError(f"unknown match strategy: {strategy}")
 
 
 def stem_candidates(words: jnp.ndarray, **kw):
@@ -41,10 +56,26 @@ def unpack_keys(keys: jnp.ndarray) -> jnp.ndarray:
     )
 
 
+def extract_roots_fused(words, roots, *, infix: bool = True,
+                        match: str = "bsearch", block_b: int = 256,
+                        interpret: bool | None = None):
+    """Single-launch megakernel: all five stages in ONE pallas_call with
+    VMEM-resident dictionaries (stem_fused.py). Same contract as
+    repro.core.stemmer.extract_roots; bit-identical output.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    return sf.stem_fused_pallas(words, roots, infix=infix, match=match,
+                                block_b=block_b, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("infix", "interpret"))
-def extract_roots_fused(words, roots, *, infix: bool = True, interpret: bool | None = None):
-    """Full kernel pipeline: datapath kernel -> match kernels -> priority
-    select. Same contract as repro.core.stemmer.extract_roots.
+def extract_roots_multilaunch(words, roots, *, infix: bool = True,
+                              interpret: bool | None = None):
+    """The pre-megakernel pipeline: datapath kernel -> 5 match kernel
+    launches -> priority select, with keys/valid/hit masks round-tripping
+    through HBM between launches. Kept as the baseline the megakernel is
+    benchmarked against (benchmarks/throughput.py).
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -69,3 +100,33 @@ def extract_roots_fused(words, roots, *, infix: bool = True, interpret: bool | N
     )
     source = jnp.where(found, tags[first], pyref.SRC_NONE)
     return root, source
+
+
+def autotune_stem_fused(words, roots, *, infix: bool = True,
+                        block_bs=(128, 256, 512), matches=("bank", "bsearch"),
+                        iters: int = 2, interpret: bool | None = None):
+    """Time the megakernel over (block_b, match) and return the best config.
+
+    Returns ``{"block_b": int, "match": str, "timings": {(block_b, match):
+    seconds}}``. Timings include one warmup (compile) call, then ``iters``
+    measured calls each. Tiny by design: the search space is the two
+    Compare strategies x a few batch tiles, which is all that matters for
+    this kernel (the datapath is compute-bound and tile-shape agnostic).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    timings = {}
+    # clamp tiles to the batch (small batches still tune over strategies)
+    bbs = sorted({min(bb, words.shape[0]) for bb in block_bs})
+    for bb in bbs:
+        for m in matches:
+            call = functools.partial(
+                extract_roots_fused, words, roots, infix=infix,
+                match=m, block_b=bb, interpret=interpret)
+            jax.block_until_ready(call())  # warmup/compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(call())
+            timings[(bb, m)] = (time.perf_counter() - t0) / iters
+    best_bb, best_m = min(timings, key=timings.get)
+    return {"block_b": best_bb, "match": best_m, "timings": timings}

@@ -7,7 +7,9 @@ stages back-to-back — check, produce (masking networks), generate
 (truncation grid), filter, infix transforms, key packing — emitting the 30
 packed candidate keys + validity flags per word. Stage 5 (Compare) is the
 separate ``stem_match`` kernel, mirroring the paper's split between the
-truncation logic and the comparator banks.
+truncation logic and the comparator banks. (``stem_fused`` goes further
+and fuses stage 5 into the same launch; it shares this module's
+``candidate_columns`` datapath body.)
 
 The masking networks are implemented as unrolled AND chains over the 16
 character slots — a literal transcription of the FPGA combinational
@@ -44,8 +46,15 @@ def _member(x, codes) -> jnp.ndarray:
     return hit
 
 
-def _datapath_kernel(words_ref, keys_ref, valid_ref):
-    w = words_ref[...]  # (bb, 16) int32
+def candidate_columns(w: jnp.ndarray):
+    """Stages 1-4 on a resident word tile: the shared datapath body.
+
+    w int32[bb, 16] -> (key_cols, val_cols): two lists of 30 int32[bb]
+    columns in the group order documented above. Pure VPU ops (unrolled
+    AND/OR chains, no dynamic control flow), callable from any Pallas
+    kernel that holds a word tile in VMEM — both the standalone datapath
+    kernel below and the stage 1-5 megakernel (stem_fused) reuse it.
+    """
     bb = w.shape[0]
     in_word = w != 0
     n = in_word.astype(jnp.int32).sum(axis=1, keepdims=True)  # (bb, 1)
@@ -104,11 +113,17 @@ def _datapath_kernel(words_ref, keys_ref, valid_ref):
         dt_k.append(pack(c[0], c[2], zero, zero))
         dt_v.append(tv & is_inf)
 
-    key_cols = tri_k + quad_k + rest_k + dq_k + dt_k + [zero, zero]
-    val_cols = tri_v + quad_v + rest_v + dq_v + dt_v
-    val_cols = [v.astype(jnp.int32) for v in val_cols] + [zero, zero]
-    keys_ref[...] = jnp.stack(key_cols, axis=1)
-    valid_ref[...] = jnp.stack(val_cols, axis=1)
+    key_cols = tri_k + quad_k + rest_k + dq_k + dt_k
+    val_cols = [v.astype(jnp.int32) for v in tri_v + quad_v + rest_v + dq_v + dt_v]
+    return key_cols, val_cols
+
+
+def _datapath_kernel(words_ref, keys_ref, valid_ref):
+    w = words_ref[...]  # (bb, 16) int32
+    key_cols, val_cols = candidate_columns(w)
+    zero = jnp.zeros((w.shape[0],), jnp.int32)
+    keys_ref[...] = jnp.stack(key_cols + [zero, zero], axis=1)
+    valid_ref[...] = jnp.stack(val_cols + [zero, zero], axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))

@@ -1,0 +1,163 @@
+"""Pallas TPU megakernel: the whole stemmer (stages 1-5) in ONE launch.
+
+The paper's pipelined FPGA processor earns its speedup by keeping every
+stage on-chip: values never leave the datapath between Check / Produce /
+Generate / Filter / Compare. The previous "fused" TPU path was six
+separate ``pallas_call`` launches (1 datapath + 5 dictionary matches)
+that round-tripped keys, validity flags and hit masks through HBM. This
+kernel is the faithful analogue of the paper's architecture: a word tile
+enters VMEM once and ``(root, source)`` comes out — candidates, validity
+flags and hit masks live only in registers/VMEM.
+
+Layout (see DESIGN.md §5):
+  - the three packed root dictionaries (tri/quad/bi, int32 keys; ~2K
+    entries total for realistic dictionaries) ride along as
+    VMEM-resident blocks with a constant index map, so the pipeline
+    fetches them once and revisits them for every batch tile;
+  - stages 1-4 are the shared :func:`stem_datapath.candidate_columns`
+    datapath (unrolled AND/OR masking networks, truncation grid, infix
+    transforms, 24-bit key packing);
+  - stage 5 (Compare) supports two in-kernel strategies:
+      match="bank"     all-pairs equality against the dictionary tile —
+                       the paper's comparator banks (O(R) per candidate);
+      match="bsearch"  unrolled branchless binary search over the sorted
+                       dictionary — the paper's §7 proposed tree search
+                       (ceil(log2 R) static steps, O(log R) per
+                       candidate); see stem_match.bsearch_hit;
+  - the priority select (first hit in VHDL candidate order) is a
+    cumulative-sum one-hot reduction, so no gather is needed on the
+    output side.
+
+Dictionaries large enough to pressure VMEM (>~64K keys) should instead
+stream over a minor grid axis double-buffered (the stem_match kernel
+shows the pattern); `stem_fused_pallas` asserts the resident budget and
+DESIGN.md documents the switch-over.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import alphabet as ab
+from repro.core import pyref
+from repro.kernels import stem_datapath as sdp
+from repro.kernels import stem_match as sm
+
+N_CAND = 6
+# candidate-group order == stem_datapath layout == core.stemmer priority
+GROUP_DICTS = ("tri", "quad", "tri", "tri", "bi")
+GROUP_TAGS = (
+    pyref.SRC_TRI,
+    pyref.SRC_QUAD,
+    pyref.SRC_RESTORED,
+    pyref.SRC_DEINFIX_TRI,
+    pyref.SRC_DEINFIX_BI,
+)
+# VMEM residency budget for the three dictionaries combined (int32 words).
+# Beyond this, switch to the streamed stem_match kernel (DESIGN.md §5.3).
+MAX_RESIDENT_KEYS = 1 << 16
+
+
+def _bank_hit(flat_dict: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs comparator bank: keys[bb,6] vs flat_dict[Rp] -> bool[bb,6]."""
+    return (keys[..., None] == flat_dict[None, None, :]).any(-1)
+
+
+def _fused_kernel(words_ref, tri_ref, quad_ref, bi_ref, root_ref, src_ref,
+                  *, n_groups: int, match: str):
+    w = words_ref[...]                             # (bb, 16) int32
+    key_cols, val_cols = sdp.candidate_columns(w)  # stages 1-4, 30 columns
+    n_slots = n_groups * N_CAND
+    keys = jnp.stack(key_cols[:n_slots], axis=1)   # (bb, n_slots)
+    valid = jnp.stack(val_cols[:n_slots], axis=1) > 0
+
+    dicts = {"tri": tri_ref[...].reshape(-1),
+             "quad": quad_ref[...].reshape(-1),
+             "bi": bi_ref[...].reshape(-1)}
+
+    # ---- stage 5a: Compare — per-group match against the resident dict ---
+    hit_cols = []
+    for g in range(n_groups):
+        kg = keys[:, g * N_CAND : (g + 1) * N_CAND]
+        d = dicts[GROUP_DICTS[g]]
+        hit_cols.append(sm.bsearch_hit(d, kg) if match == "bsearch"
+                        else _bank_hit(d, kg))
+    hits = jnp.concatenate(hit_cols, axis=1) & valid   # (bb, n_slots)
+
+    # ---- stage 5b: priority select (first hit in VHDL candidate order) ---
+    # One-hot of the first True per row — cumsum==1 on a hit slot — so the
+    # winning key/tag fall out of a masked sum, gather-free.
+    hits_i = hits.astype(jnp.int32)
+    is_first = hits_i * (jnp.cumsum(hits_i, axis=1) == 1)
+    chosen = (keys * is_first).sum(axis=1)             # 0 when no hit
+    # per-group tag weights are static python ints (no captured constants)
+    grp_first = is_first.reshape(-1, n_groups, N_CAND).sum(axis=2)
+    source = sum(int(GROUP_TAGS[g]) * grp_first[:, g] for g in range(n_groups))
+    root_ref[...] = jnp.stack(
+        [(chosen >> 18) & 63, (chosen >> 12) & 63,
+         (chosen >> 6) & 63, chosen & 63], axis=1)
+    src_ref[...] = source[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("infix", "match", "block_b", "interpret"))
+def stem_fused_pallas(
+    words: jnp.ndarray,
+    roots,
+    *,
+    infix: bool = True,
+    match: str = "bsearch",
+    block_b: int = 256,
+    interpret: bool = False,
+):
+    """words int32[B,16] + RootDictArrays -> (root int32[B,4], source int32[B]).
+
+    Single ``pallas_call``: grid is the batch tiling only; the packed
+    dictionaries are VMEM-resident across all grid steps (constant index
+    map). Bit-identical to ``core.stemmer.extract_roots`` (and pyref).
+    """
+    if match not in ("bank", "bsearch"):
+        raise ValueError(f"unknown in-kernel match strategy: {match}")
+    n_groups = 5 if infix else 2
+
+    total_keys = sum(int(d.shape[0]) for d in (roots.tri, roots.quad, roots.bi))
+    if total_keys > MAX_RESIDENT_KEYS:
+        raise ValueError(
+            f"dictionaries too large for VMEM residency ({total_keys} keys >"
+            f" {MAX_RESIDENT_KEYS}); stream stage 5 via stem_match instead"
+            " (DESIGN.md §5.3)")
+
+    prep = sm.pad_dict_sorted if match == "bsearch" else sm.pad_dict_lanes
+    tri2, quad2, bi2 = prep(roots.tri), prep(roots.quad), prep(roots.bi)
+
+    b = words.shape[0]
+    if b == 0:  # degenerate batch: nothing to launch
+        return (jnp.zeros((0, 4), jnp.int32), jnp.zeros((0,), jnp.int32))
+    pad = (-b) % block_b
+    wp = jnp.pad(words, ((0, pad), (0, 0)))
+    bp = wp.shape[0]
+    grid = (bp // block_b,)
+
+    dict_spec = lambda d: pl.BlockSpec(d.shape, lambda i: (0, 0))
+    root, source = pl.pallas_call(
+        functools.partial(_fused_kernel, n_groups=n_groups, match=match),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, ab.MAXLEN), lambda i: (i, 0)),
+            dict_spec(tri2), dict_spec(quad2), dict_spec(bi2),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 4), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, 4), jnp.int32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(wp, tri2, quad2, bi2)
+    return root[:b], source[:b, 0]

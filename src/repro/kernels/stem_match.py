@@ -27,6 +27,54 @@ from jax.experimental import pallas as pl
 LANE = 128
 KEY_PAD = -1
 DICT_PAD = -2
+# bsearch padding sentinel: larger than any packed 24-bit key, so padding a
+# sorted dictionary on the right keeps it sorted and never matches.
+DICT_SENTINEL = 1 << 28
+
+
+def _ceil_log2(n: int) -> int:
+    k = 0
+    while (1 << k) < n:
+        k += 1
+    return k
+
+
+def pad_dict_lanes(dict_keys: jnp.ndarray) -> jnp.ndarray:
+    """Pad to a LANE multiple with DICT_PAD and reshape (rows, LANE)."""
+    r = dict_keys.shape[0]
+    r_pad = (-r) % LANE
+    return jnp.pad(dict_keys, (0, r_pad), constant_values=DICT_PAD).reshape(-1, LANE)
+
+
+def pad_dict_sorted(dict_keys: jnp.ndarray) -> jnp.ndarray:
+    """Pad a *sorted* dictionary to the next pow2 >= LANE with DICT_SENTINEL,
+    reshaped (rows, LANE) so it ships to VMEM as a lane-aligned 2D tile."""
+    r = dict_keys.shape[0]
+    rp = max(LANE, 1 << _ceil_log2(r))
+    return jnp.pad(dict_keys, (0, rp - r),
+                   constant_values=DICT_SENTINEL).reshape(-1, LANE)
+
+
+def bsearch_hit(flat_dict: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Membership via an unrolled branchless binary search.
+
+    flat_dict int32[Rp] sorted ascending, Rp a power of two (sentinel
+    padded); keys int32[...] -> bool[...]. Exactly ceil(log2 Rp) static
+    bisection steps — the paper's §7 'tree search' Compare upgrade: each
+    step halves the [lo, hi] window with a predicated select instead of a
+    branch, so the whole search is a fixed-depth dataflow graph (the TPU
+    analogue of a pipelined hardware tree walker).
+    """
+    rp = flat_dict.shape[0]
+    lo = jnp.zeros(keys.shape, jnp.int32)
+    hi = jnp.full(keys.shape, rp - 1, jnp.int32)
+    for _ in range(_ceil_log2(rp)):
+        mid = (lo + hi) // 2
+        v = jnp.take(flat_dict, mid, mode="clip")
+        ge = v >= keys
+        hi = jnp.where(ge, mid, hi)
+        lo = jnp.where(ge, lo, mid + 1)
+    return jnp.take(flat_dict, lo, mode="clip") == keys
 
 
 def _match_kernel(keys_ref, dict_ref, out_ref):
@@ -76,6 +124,52 @@ def dict_match_pallas(
             pl.BlockSpec((block_r, LANE), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((block_n, LANE), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(keys_p.shape, jnp.int32),
+        interpret=interpret,
+    )(keys_p, dict_p)
+    return out.reshape(-1)[:n].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# O(log R) variant: in-kernel sorted search, dictionary resident in VMEM
+# ---------------------------------------------------------------------------
+def _bsearch_kernel(keys_ref, dict_ref, out_ref):
+    """Grid (n_tiles,); the whole (sentinel-padded) dictionary rides along
+    as a VMEM-resident block (constant index map), so one launch covers all
+    key tiles with no HBM round-trips between bisection steps."""
+    keys = keys_ref[...]                      # (bn, LANE) int32
+    flat = dict_ref[...].reshape(-1)          # (Rp,) sorted + sentinel
+    out_ref[...] = bsearch_hit(flat, keys).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def dict_match_bsearch_pallas(
+    keys: jnp.ndarray,
+    dict_keys: jnp.ndarray,
+    *,
+    block_n: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """keys int32[N], dict_keys int32[R] *sorted* -> bool[N].
+
+    O(N log R) compare — the paper's proposed tree-search upgrade run
+    inside the kernel: ceil(log2 R) predicated bisection steps per key
+    against the VMEM-resident sorted dictionary.
+    """
+    n = keys.shape[0]
+    n_pad = (-n) % (block_n * LANE)
+    keys_p = jnp.pad(keys, (0, n_pad), constant_values=KEY_PAD).reshape(-1, LANE)
+    dict_p = pad_dict_sorted(dict_keys)
+
+    n_tiles = keys_p.shape[0] // block_n
+    out = pl.pallas_call(
+        _bsearch_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((block_n, LANE), lambda i: (i, 0)),
+            pl.BlockSpec(dict_p.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, LANE), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(keys_p.shape, jnp.int32),
         interpret=interpret,
     )(keys_p, dict_p)
