@@ -1,0 +1,77 @@
+"""Dictionary-size scaling: resident vs streamed megakernel Compare.
+
+The paper's dictionaries are tiny (its Compare banks hold the whole root
+table on-chip); production lexicons run to hundreds of thousands of
+entries. This section sweeps the packed dictionary size and times the
+megakernel in both residency layouts (DESIGN.md §5.3):
+
+  resident   dictionaries ride along as constant-index-map VMEM blocks
+             (skipped past stem_fused.MAX_RESIDENT_KEYS — it would raise)
+  streamed   (dict_block_r x 128) tiles over a minor grid axis with an
+             OR-accumulating hit scratch — unbounded dictionary size
+
+The recorded rows expose the resident/streamed crossover; the `sorted`
+core-jnp backend rides along as the non-kernel reference. Dictionary
+growth is synthetic (corpus.grow_root_arrays) but keeps the real root
+keys, so real matches still occur at every size.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.timing import bench as _bench
+from repro.core import corpus, stemmer
+from repro.kernels import ops
+from repro.kernels import stem_fused as sf
+
+
+def run(sizes=(2048, 8192, 32768, 131072, 262144), n_words: int = 2048,
+        block_b: int = 256, dict_block_r: int = 8, match: str = "bsearch"):
+    d = corpus.build_dictionary(n_tri=1000, n_quad=120, seed=0)
+    base = stemmer.RootDictArrays.from_rootdict(d)
+    words, _, _ = corpus.build_corpus(n_words=n_words, seed=1)
+    enc = jnp.asarray(corpus.encode_corpus(words))
+
+    rows = []
+    for n in sizes:
+        da = corpus.grow_root_arrays(base, n, seed=n)
+        total = sum(int(x.shape[0]) for x in (da.tri, da.quad, da.bi))
+
+        dt, _ = _bench(stemmer.stem_batch, enc, da, backend="sorted",
+                       warmup=1, iters=1)
+        rows.append(_row(n, total, n_words, "jnp_sorted", dt))
+
+        for residency in ("resident", "streamed"):
+            if residency == "resident" and total > sf.MAX_RESIDENT_KEYS:
+                continue  # over the VMEM budget: resident would raise
+            dt, _ = _bench(ops.extract_roots_fused, enc, da, match=match,
+                           block_b=block_b, residency=residency,
+                           dict_block_r=dict_block_r, interpret=True,
+                           warmup=1, iters=1)
+            rows.append(_row(n, total, n_words, residency, dt,
+                             dict_block_r=dict_block_r, match=match))
+    return rows
+
+
+def _row(n, total, n_words, variant, dt, **extra):
+    return {
+        "name": f"dict_scaling_n{n}_{variant}",
+        "n_keys": total,
+        "n_words": n_words,
+        "residency": variant,
+        "us_per_call": 1e6 * dt,
+        "wps": n_words / dt,
+        **extra,
+    }
+
+
+def main(**kw):
+    rows = run(**kw)
+    for r in rows:
+        print(f"{r['name']},{1e6 / r['wps']:.3f},"
+              f"{r['wps']:.1f}Wps_{r['n_keys']}keys")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,8 @@ Prints ``name,us_per_call,derived`` CSV lines:
   throughput_*   Fig 16  (software vs non-pipelined vs pipelined Wps,
                           plus multi-launch vs megakernel backends)
   scaling_*      Fig 17  (throughput vs word count)
+  dict_scaling_* §5.3    (resident vs streamed megakernel over
+                          dictionary sizes 2K -> 256K keys)
   table6_*       Table 6 (accuracy ± infix processing)
   table7_*       Table 7 (per-root accuracy, top-frequency roots)
   compare_*      §6.4    (Compare-stage: linear vs sorted search)
@@ -30,6 +32,9 @@ from pathlib import Path
 SMOKE_PARAMS = {
     "throughput": dict(n_words=2048, seq_words=64),
     "scaling": dict(sizes=(512, 2048)),
+    # 131072 keys > MAX_RESIDENT_KEYS: the smoke run always exercises one
+    # streamed-dictionary configuration (CI fails if the section is absent)
+    "dict_scaling": dict(sizes=(2048, 131072), n_words=512),
     "accuracy": dict(n_words=2000),
     "compare_stage": dict(n_keys=4096, dict_sizes=(512, 2048),
                           pallas_max_r=2048),
@@ -44,11 +49,13 @@ def main(argv=None) -> None:
                     help='output path for the JSON record ("-" disables)')
     args = ap.parse_args(argv)
 
-    from benchmarks import accuracy_bench, compare_stage, roofline, scaling, throughput
+    from benchmarks import (accuracy_bench, compare_stage, dict_scaling,
+                            roofline, scaling, throughput)
 
     sections = [
         ("throughput", throughput.main),
         ("scaling", scaling.main),
+        ("dict_scaling", dict_scaling.main),
         ("accuracy", accuracy_bench.main),
         ("compare_stage", compare_stage.main),
         ("roofline", roofline.main),

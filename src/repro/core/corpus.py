@@ -70,6 +70,67 @@ def build_dictionary(n_tri: int = 2000, n_quad: int = 200, seed: int = 0) -> pyr
     return pyref.RootDict.from_words(tri=tri, quad=quad, bi=REAL_BI_ROOTS)
 
 
+def _synthetic_keys(n: int, arity: int, seed: int, taken: set) -> np.ndarray:
+    """n unique packed int32 keys shaped like real `arity`-letter roots
+    (dense codes in 1..N_CODES-1, trailing chars zero), disjoint from
+    ``taken``. Vectorised rejection sampling."""
+    rng = np.random.default_rng(seed)
+    out: list[int] = []
+    seen = set(taken)
+    while len(out) < n:
+        c = rng.integers(1, ab.N_CODES, size=(2 * (n - len(out)) + 64, 4),
+                         dtype=np.int64)
+        c[:, arity:] = 0
+        keys = ((c[:, 0] * 64 + c[:, 1]) * 64 + c[:, 2]) * 64 + c[:, 3]
+        for k in keys.tolist():
+            if k not in seen:
+                seen.add(k)
+                out.append(k)
+                if len(out) == n:
+                    break
+    return np.asarray(out, np.int32)
+
+
+def grow_root_arrays(arrays, n_keys: int, seed: int = 0):
+    """Grow packed RootDictArrays to ~``n_keys`` total keys with synthetic
+    roots (real keys kept, so real matches still occur).
+
+    Production lexicons run to hundreds of thousands of entries — far past
+    what ``build_dictionary``'s linguistic generator can produce (distinct
+    strong-consonant trilaterals top out near 33^3). The streamed-megakernel
+    scaling benchmark and the >64K-key parity tests need dictionaries at
+    that scale, so the bulk lands in the quadrilateral table (33^4 ≈ 1.19M
+    capacity) with tri/bi capped well under their key-space saturation.
+    Returns a new RootDictArrays with sorted unique int32 keys per table.
+    """
+    from repro.core import stemmer  # lazy: stemmer imports corpus's peers
+
+    base = {
+        "tri": np.asarray(arrays.tri),
+        "quad": np.asarray(arrays.quad),
+        "bi": np.asarray(arrays.bi),
+    }
+    n_base = sum(v.size for v in base.values())
+    extra = max(0, n_keys - n_base)
+    want = {
+        "tri": min(extra // 2, 16_000),
+        "bi": min(extra // 64, 500),
+    }
+    want["quad"] = extra - want["tri"] - want["bi"]
+    taken = set(np.concatenate(list(base.values())).tolist())
+    grown = {}
+    for arity, name in ((3, "tri"), (4, "quad"), (2, "bi")):
+        synth = _synthetic_keys(want[name], arity, seed + arity, taken)
+        taken.update(synth.tolist())
+        merged = np.unique(np.concatenate([base[name], synth])).astype(np.int32)
+        grown[name] = np.asarray(merged)
+    import jax.numpy as jnp
+
+    return stemmer.RootDictArrays(tri=jnp.asarray(grown["tri"]),
+                                  quad=jnp.asarray(grown["quad"]),
+                                  bi=jnp.asarray(grown["bi"]))
+
+
 def build_corpus(
     n_words: int = 20000, seed: int = 0, zipf_a: float = 1.3, rich: bool = True
 ) -> tuple[list[str], list[str], list[str]]:

@@ -159,7 +159,8 @@ def _match(keys, dict_keys, backend: str):
 # ---------------------------------------------------------------------------
 # Full extraction
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("infix", "backend", "extended"))
+@functools.partial(jax.jit, static_argnames=("infix", "backend", "extended",
+                                             "residency"))
 def extract_roots(
     words: jnp.ndarray,
     roots: RootDictArrays,
@@ -167,6 +168,7 @@ def extract_roots(
     infix: bool = True,
     backend: str = "sorted",
     extended: bool = False,
+    residency: str = "auto",
 ):
     """words int32[B,16] -> (root int32[B,4], source int32[B]).
 
@@ -175,16 +177,20 @@ def extract_roots(
 
     backend selects the Compare stage implementation: "dense" / "sorted"
     (pure jnp), "pallas" (tiled comparator-bank kernel) or "fused" — the
-    single-launch stage 1-5 megakernel with VMEM-resident dictionaries
-    (kernels/stem_fused.py; paper-exact, no intermediate HBM tensors).
-    The extended rule pool is not in the megakernel's candidate grid, so
-    extended=True keeps the staged path and uses the megakernel's
-    in-kernel sorted search for stage 5 only.
+    single-launch stage 1-5 megakernel (kernels/stem_fused.py;
+    paper-exact, no intermediate HBM tensors). For the fused backend,
+    residency picks the dictionary layout: "resident" (VMEM-held),
+    "streamed" (tiles over a minor grid axis — unbounded dictionary
+    size), or "auto" (default: resident while it fits). The extended rule
+    pool is not in the megakernel's candidate grid, so extended=True
+    keeps the staged path and uses the megakernel's in-kernel sorted
+    search for stage 5 only.
     """
     if backend == "fused" and not extended:
         from repro.kernels import ops  # lazy: kernels depend on core
 
-        return ops.extract_roots_fused(words, roots, infix=infix)
+        return ops.extract_roots_fused(words, roots, infix=infix,
+                                       residency=residency)
 
     tri, tri_valid, quad, quad_valid = generate_stems(words)
     infix_codes = jnp.asarray(ab.INFIX_CODES)
@@ -246,27 +252,33 @@ def extract_roots(
 
 
 # ---------------------------------------------------------------------------
-# The paper's three execution models
+# The paper's three execution models — contract-identical signatures: each
+# accepts the full (infix, backend, extended, residency) option set.
 # ---------------------------------------------------------------------------
-def stem_batch(words, roots, *, infix=True, backend="sorted", extended=False):
+def stem_batch(words, roots, *, infix=True, backend="sorted", extended=False,
+               residency="auto"):
     """'Non-pipelined processor' analogue: whole batch through all stages."""
     return extract_roots(words, roots, infix=infix, backend=backend,
-                         extended=extended)
+                         extended=extended, residency=residency)
 
 
-@functools.partial(jax.jit, static_argnames=("infix", "backend"))
-def stem_sequential(words, roots, *, infix=True, backend="sorted"):
+@functools.partial(jax.jit, static_argnames=("infix", "backend", "extended",
+                                             "residency"))
+def stem_sequential(words, roots, *, infix=True, backend="sorted",
+                    extended=False, residency="auto"):
     """'Software implementation' analogue: one word at a time (lax.scan)."""
 
     def step(carry, w):
-        r, s = extract_roots(w[None], roots, infix=infix, backend=backend)
+        r, s = extract_roots(w[None], roots, infix=infix, backend=backend,
+                             extended=extended, residency=residency)
         return carry, (r[0], s[0])
 
     _, (root, source) = jax.lax.scan(step, 0, words)
     return root, source
 
 
-def stem_pipelined(words, roots, *, infix=True, backend="sorted", microbatch=256):
+def stem_pipelined(words, roots, *, infix=True, backend="sorted",
+                   extended=False, residency="auto", microbatch=256):
     """'Pipelined processor' analogue on one host: microbatched streaming.
 
     On real hardware the per-microbatch stages overlap via async dispatch;
@@ -277,7 +289,9 @@ def stem_pipelined(words, roots, *, infix=True, backend="sorted", microbatch=256
     pad = (-b) % microbatch
     wp = jnp.pad(words, ((0, pad), (0, 0)))
     chunks = wp.reshape(-1, microbatch, words.shape[1])
-    outs = [stem_batch(c, roots, infix=infix, backend=backend) for c in chunks]
+    outs = [stem_batch(c, roots, infix=infix, backend=backend,
+                       extended=extended, residency=residency)
+            for c in chunks]
     root = jnp.concatenate([o[0] for o in outs])[:b]
     source = jnp.concatenate([o[1] for o in outs])[:b]
     return root, source

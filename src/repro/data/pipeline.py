@@ -42,13 +42,18 @@ class MorphPreprocessor:
 
     backend is any core.stemmer Compare backend ("sorted" / "dense" /
     "pallas" / "fused" — the last runs the single-launch stage 1-5
-    megakernel, see kernels/stem_fused.py).
+    megakernel, see kernels/stem_fused.py). For the fused backend,
+    residency picks the megakernel's dictionary layout ("resident" /
+    "streamed" / "auto"; "auto" streams production-size dictionaries
+    past the VMEM budget — DESIGN.md §5.3).
     """
 
-    def __init__(self, n_tri=2000, n_quad=200, backend="sorted", seed=0):
+    def __init__(self, n_tri=2000, n_quad=200, backend="sorted", seed=0,
+                 residency="auto"):
         self.rootdict = corpus_mod.build_dictionary(n_tri, n_quad, seed)
         self.arrays = stemmer.RootDictArrays.from_rootdict(self.rootdict)
         self.backend = backend
+        self.residency = residency
         # root id table: sorted packed keys; id == searchsorted rank + 1
         keys = sorted(
             {ab.pack_key(r) for r in self.rootdict.tri}
@@ -60,7 +65,9 @@ class MorphPreprocessor:
     def __call__(self, words: list[str]):
         """words -> (char_tokens int32[B,16], root_ids int32[B])."""
         enc = corpus_mod.encode_corpus(words)
-        roots, _src = stemmer.stem_batch(enc, self.arrays, backend=self.backend)
+        roots, _src = stemmer.stem_batch(enc, self.arrays,
+                                         backend=self.backend,
+                                         residency=self.residency)
         roots = np.asarray(roots).astype(np.int64)
         keys = ((roots[:, 0] * 64 + roots[:, 1]) * 64 + roots[:, 2]) * 64 + roots[:, 3]
         # vectorised key -> dense id: rank lookup in the sorted key table
@@ -76,7 +83,10 @@ def morph_lm_batches(batch_words: int, seq: int, seed: int = 0,
 
     Words are conjugated verb forms (corpus.build_corpus); tokens are
     6-bit char codes (vocab = alphabet.N_CODES + separator); labels shift
-    by one; root ids accompany each word for auxiliary supervision.
+    by one. Each chunk carries ONLY the root ids of the words whose
+    characters actually appear in that chunk ("root_ids"), plus the
+    half-open word-index span it covers ("word_span") — auxiliary
+    root-prediction labels stay aligned with the chunk's content.
     """
     pre = preproc or MorphPreprocessor(seed=seed)
     rng = np.random.default_rng(seed)
@@ -87,17 +97,24 @@ def morph_lm_batches(batch_words: int, seq: int, seed: int = 0,
         words, _truths, _ = corpus_mod.build_corpus(
             n_words=batch_words, seed=seed + epoch)
         enc, root_ids = pre(words)
-        stream = []
-        for row in enc:
-            stream.extend(int(c) for c in row if c)
+        stream, word_of = [], []
+        for wi, row in enumerate(enc):
+            for c in row:
+                if c:
+                    stream.append(int(c))
+                    word_of.append(wi)
             stream.append(sep)
-        toks = np.asarray(stream[: (len(stream) // (seq + 1)) * (seq + 1)],
-                          np.int32).reshape(-1, seq + 1)
+            word_of.append(wi)  # the separator still belongs to word wi
+        n_tok = (len(stream) // (seq + 1)) * (seq + 1)
+        toks = np.asarray(stream[:n_tok], np.int32).reshape(-1, seq + 1)
+        spans = np.asarray(word_of[:n_tok], np.int32).reshape(-1, seq + 1)
         for i in range(toks.shape[0]):
+            w0, w1 = int(spans[i, 0]), int(spans[i, -1]) + 1
             yield {
                 "tokens": toks[i : i + 1, :-1],
                 "labels": toks[i : i + 1, 1:].copy(),
                 "vocab": vocab,
-                "root_ids": root_ids,
+                "root_ids": root_ids[w0:w1],
+                "word_span": (w0, w1),
             }
         epoch += 1

@@ -97,7 +97,32 @@ def _slot_mask(groups) -> np.ndarray:
     return mask
 
 
-def stemmer_stage_fns(roots: "stemmer.RootDictArrays"):
+def _streamed_match_sorted(keys, dict_keys, chunk_keys: int):
+    """OR-accumulating chunked sorted match: the jnp analogue of the
+    megakernel's streamed Compare path (stem_fused._fused_streamed_kernel).
+
+    The sorted dictionary is swept in ``chunk_keys``-sized sentinel-padded
+    tiles (each tile stays sorted, so per-tile searchsorted is exact) while
+    the candidate keys stay live — on a device this bounds the Compare
+    stage's working set the same way the kernel's minor grid axis does.
+    """
+    from repro.kernels import stem_match as sm  # sentinel constant only
+
+    r = dict_keys.shape[0]
+    n_tiles = max(1, -(-r // chunk_keys))
+    padded = jnp.pad(dict_keys, (0, n_tiles * chunk_keys - r),
+                     constant_values=sm.DICT_SENTINEL)
+
+    def tick(t, acc):
+        tile = jax.lax.dynamic_slice(padded, (t * chunk_keys,), (chunk_keys,))
+        return acc | stemmer.match_sorted(keys, tile)
+
+    return jax.lax.fori_loop(0, n_tiles, tick,
+                             jnp.zeros(keys.shape, bool))
+
+
+def stemmer_stage_fns(roots: "stemmer.RootDictArrays", *,
+                      residency: str = "auto", chunk_keys: int = 1 << 14):
     """The paper's 5-stage split over a bundle of
     {words[mb,16], keys[mb,32], valid[mb,32], root[mb,4], source[mb]}.
 
@@ -106,7 +131,14 @@ def stemmer_stage_fns(roots: "stemmer.RootDictArrays"):
     split per dictionary (tri / quad / bi comparator banks — ``valid``
     doubles as the running hit mask, the FPGA's inter-stage flag
     register); stage 5 is the priority select.
+
+    residency mirrors the megakernel policy (DESIGN.md §5.3): "resident"
+    matches against the whole dictionary at once, "streamed" sweeps it in
+    ``chunk_keys``-sized tiles with an OR-accumulating hit mask, "auto"
+    (default) streams any dictionary larger than ``chunk_keys``.
     """
+    if residency not in ("resident", "streamed", "auto"):
+        raise ValueError(f"unknown residency: {residency!r}")
     tri_mask = jnp.asarray(_slot_mask((0, 2, 3)))   # tri, restored, deinf-quad
     quad_mask = jnp.asarray(_slot_mask((1,)))
     bi_mask = jnp.asarray(_slot_mask((4,)))
@@ -116,8 +148,14 @@ def stemmer_stage_fns(roots: "stemmer.RootDictArrays"):
         return {**b, "keys": keys, "valid": valid}
 
     def compare(dict_keys, mask):
+        streamed = residency == "streamed" or (
+            residency == "auto" and dict_keys.shape[0] > chunk_keys)
+
         def fn(b):
-            hit = stemmer.match_sorted(b["keys"], dict_keys)
+            if streamed:
+                hit = _streamed_match_sorted(b["keys"], dict_keys, chunk_keys)
+            else:
+                hit = stemmer.match_sorted(b["keys"], dict_keys)
             valid = jnp.where(mask[None, :], b["valid"] * hit, b["valid"])
             return {**b, "valid": valid.astype(jnp.int32)}
         return fn

@@ -58,15 +58,23 @@ def unpack_keys(keys: jnp.ndarray) -> jnp.ndarray:
 
 def extract_roots_fused(words, roots, *, infix: bool = True,
                         match: str = "bsearch", block_b: int = 256,
+                        residency: str = "auto", dict_block_r: int = 8,
                         interpret: bool | None = None):
-    """Single-launch megakernel: all five stages in ONE pallas_call with
-    VMEM-resident dictionaries (stem_fused.py). Same contract as
-    repro.core.stemmer.extract_roots; bit-identical output.
+    """Single-launch megakernel: all five stages in ONE pallas_call
+    (stem_fused.py). Same contract as repro.core.stemmer.extract_roots;
+    bit-identical output.
+
+    residency: "resident" keeps the packed dictionaries in VMEM across
+    the batch sweep, "streamed" iterates (dict_block_r x 128) dictionary
+    tiles over a minor grid axis (unbounded dictionary size), "auto"
+    (default) streams only past stem_fused.MAX_RESIDENT_KEYS.
     """
     if interpret is None:
         interpret = _interpret_default()
     return sf.stem_fused_pallas(words, roots, infix=infix, match=match,
-                                block_b=block_b, interpret=interpret)
+                                block_b=block_b, residency=residency,
+                                dict_block_r=dict_block_r,
+                                interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("infix", "interpret"))
@@ -104,29 +112,51 @@ def extract_roots_multilaunch(words, roots, *, infix: bool = True,
 
 def autotune_stem_fused(words, roots, *, infix: bool = True,
                         block_bs=(128, 256, 512), matches=("bank", "bsearch"),
+                        residencies=("resident", "streamed"),
+                        dict_block_rs=(4, 8, 16),
                         iters: int = 2, interpret: bool | None = None):
-    """Time the megakernel over (block_b, match) and return the best config.
+    """Time the megakernel over (block_b, match, residency, dict tile rows)
+    and return the best config.
 
-    Returns ``{"block_b": int, "match": str, "timings": {(block_b, match):
-    seconds}}``. Timings include one warmup (compile) call, then ``iters``
-    measured calls each. Tiny by design: the search space is the two
-    Compare strategies x a few batch tiles, which is all that matters for
-    this kernel (the datapath is compute-bound and tile-shape agnostic).
+    Returns ``{"block_b": int, "match": str, "residency": str,
+    "dict_block_r": int, "timings": {(block_b, match, residency,
+    dict_block_r): seconds}}``. Timings include one warmup (compile) call,
+    then ``iters`` measured calls each. Resident configs use
+    ``dict_block_r=0`` in the timing key (the knob only exists on the
+    streamed path) and are skipped entirely when the dictionaries exceed
+    the VMEM residency budget.
     """
     if interpret is None:
         interpret = _interpret_default()
+    resident_ok = (sum(int(d.shape[0])
+                       for d in (roots.tri, roots.quad, roots.bi))
+                   <= sf.MAX_RESIDENT_KEYS)
     timings = {}
     # clamp tiles to the batch (small batches still tune over strategies)
     bbs = sorted({min(bb, words.shape[0]) for bb in block_bs})
     for bb in bbs:
         for m in matches:
-            call = functools.partial(
-                extract_roots_fused, words, roots, infix=infix,
-                match=m, block_b=bb, interpret=interpret)
-            jax.block_until_ready(call())  # warmup/compile
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                jax.block_until_ready(call())
-            timings[(bb, m)] = (time.perf_counter() - t0) / iters
-    best_bb, best_m = min(timings, key=timings.get)
-    return {"block_b": best_bb, "match": best_m, "timings": timings}
+            for res in residencies:
+                if res == "resident" and not resident_ok:
+                    continue
+                # dict tiling is a no-op knob on the resident path
+                drs = dict_block_rs if res == "streamed" else (0,)
+                for dr in drs:
+                    call = functools.partial(
+                        extract_roots_fused, words, roots, infix=infix,
+                        match=m, block_b=bb, residency=res,
+                        dict_block_r=dr or 8, interpret=interpret)
+                    jax.block_until_ready(call())  # warmup/compile
+                    t0 = time.perf_counter()
+                    for _ in range(iters):
+                        jax.block_until_ready(call())
+                    timings[(bb, m, res, dr)] = (
+                        time.perf_counter() - t0) / iters
+    if not timings:
+        raise ValueError(
+            "autotune_stem_fused: no runnable config — the dictionaries"
+            f" exceed the VMEM residency budget ({sf.MAX_RESIDENT_KEYS}"
+            " keys) and residencies excludes 'streamed'")
+    best_bb, best_m, best_res, best_dr = min(timings, key=timings.get)
+    return {"block_b": best_bb, "match": best_m, "residency": best_res,
+            "dict_block_r": best_dr or 8, "timings": timings}

@@ -28,10 +28,17 @@ Layout (see DESIGN.md §5):
     cumulative-sum one-hot reduction, so no gather is needed on the
     output side.
 
-Dictionaries large enough to pressure VMEM (>~64K keys) should instead
-stream over a minor grid axis double-buffered (the stem_match kernel
-shows the pattern); `stem_fused_pallas` asserts the resident budget and
-DESIGN.md documents the switch-over.
+Dictionaries large enough to pressure VMEM (>~64K keys) take the
+*streamed* Compare path (DESIGN.md §5.3): a second, minor grid axis
+iterates (tile_rows x 128) dictionary tiles through VMEM while the word
+tile, its candidate keys/validity and an OR-accumulating hit mask persist
+in VMEM scratch across the sweep — the stem_match._match_kernel revisit
+pattern lifted into the megakernel. The datapath (stages 1-4) runs only
+on the first revisit; the priority select only on the last. Each tile
+carries a [min, max] range reject, so for sorted dictionaries most tiles
+cost one predicated compare. `residency="resident"|"streamed"|"auto"`
+selects the layout; "auto" streams once the packed dictionaries exceed
+MAX_RESIDENT_KEYS.
 """
 from __future__ import annotations
 
@@ -41,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import alphabet as ab
 from repro.core import pyref
@@ -58,13 +66,44 @@ GROUP_TAGS = (
     pyref.SRC_DEINFIX_BI,
 )
 # VMEM residency budget for the three dictionaries combined (int32 words).
-# Beyond this, switch to the streamed stem_match kernel (DESIGN.md §5.3).
+# Beyond this, residency="auto" switches to the streamed Compare path
+# (minor grid axis over dictionary tiles, DESIGN.md §5.3).
 MAX_RESIDENT_KEYS = 1 << 16
+RESIDENCIES = ("resident", "streamed", "auto")
+
+
+def choose_residency(roots, residency: str = "auto") -> str:
+    """Resolve residency="auto" against the VMEM budget: keep the packed
+    dictionaries resident while they fit, stream tiles once they don't."""
+    if residency not in RESIDENCIES:
+        raise ValueError(f"unknown residency: {residency!r} (want one of"
+                         f" {RESIDENCIES})")
+    if residency != "auto":
+        return residency
+    total = sum(int(d.shape[0]) for d in (roots.tri, roots.quad, roots.bi))
+    return "streamed" if total > MAX_RESIDENT_KEYS else "resident"
 
 
 def _bank_hit(flat_dict: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
     """All-pairs comparator bank: keys[bb,6] vs flat_dict[Rp] -> bool[bb,6]."""
     return (keys[..., None] == flat_dict[None, None, :]).any(-1)
+
+
+def _priority_select(keys, hits_i, root_ref, src_ref, *, n_groups: int):
+    """Stage 5b: first hit in VHDL candidate order -> (root, source) tiles.
+
+    One-hot of the first True per row — cumsum==1 on a hit slot — so the
+    winning key/tag fall out of a masked sum, gather-free.
+    """
+    is_first = hits_i * (jnp.cumsum(hits_i, axis=1) == 1)
+    chosen = (keys * is_first).sum(axis=1)             # 0 when no hit
+    # per-group tag weights are static python ints (no captured constants)
+    grp_first = is_first.reshape(-1, n_groups, N_CAND).sum(axis=2)
+    source = sum(int(GROUP_TAGS[g]) * grp_first[:, g] for g in range(n_groups))
+    root_ref[...] = jnp.stack(
+        [(chosen >> 18) & 63, (chosen >> 12) & 63,
+         (chosen >> 6) & 63, chosen & 63], axis=1)
+    src_ref[...] = source[:, None]
 
 
 def _fused_kernel(words_ref, tri_ref, quad_ref, bi_ref, root_ref, src_ref,
@@ -88,23 +127,75 @@ def _fused_kernel(words_ref, tri_ref, quad_ref, bi_ref, root_ref, src_ref,
                         else _bank_hit(d, kg))
     hits = jnp.concatenate(hit_cols, axis=1) & valid   # (bb, n_slots)
 
-    # ---- stage 5b: priority select (first hit in VHDL candidate order) ---
-    # One-hot of the first True per row — cumsum==1 on a hit slot — so the
-    # winning key/tag fall out of a masked sum, gather-free.
-    hits_i = hits.astype(jnp.int32)
-    is_first = hits_i * (jnp.cumsum(hits_i, axis=1) == 1)
-    chosen = (keys * is_first).sum(axis=1)             # 0 when no hit
-    # per-group tag weights are static python ints (no captured constants)
-    grp_first = is_first.reshape(-1, n_groups, N_CAND).sum(axis=2)
-    source = sum(int(GROUP_TAGS[g]) * grp_first[:, g] for g in range(n_groups))
-    root_ref[...] = jnp.stack(
-        [(chosen >> 18) & 63, (chosen >> 12) & 63,
-         (chosen >> 6) & 63, chosen & 63], axis=1)
-    src_ref[...] = source[:, None]
+    # ---- stage 5b ----
+    _priority_select(keys, hits.astype(jnp.int32), root_ref, src_ref,
+                     n_groups=n_groups)
+
+
+def _fused_streamed_kernel(words_ref, dict_ref, root_ref, src_ref,
+                           keys_sc, valid_sc, hits_sc,
+                           *, n_groups: int, match: str,
+                           tri_tiles: int, quad_tiles: int):
+    """Streamed Compare: grid (batch_tiles, dict_tiles), dict axis minor.
+
+    The word tile's candidate keys/valid flags and the OR-accumulating hit
+    mask live in VMEM scratch across the dictionary sweep; the datapath
+    runs once per word tile (first revisit), the priority select once
+    (last revisit). The concatenated dictionary stream is
+    [tri tiles | quad tiles | bi tiles]; which groups a tile feeds is a
+    static-boundary comparison on the minor program id. Each tile is
+    internally sorted (sentinel padded), so its first/last element gives a
+    [min, max] range reject: tiles that cannot contain any live candidate
+    key cost one predicated compare and skip the search entirely.
+    """
+    j = pl.program_id(1)
+    n_tiles = pl.num_programs(1)
+    n_slots = n_groups * N_CAND
+
+    @pl.when(j == 0)
+    def _ingest():                                 # stages 1-4, once per tile
+        w = words_ref[...]                         # (bb, 16) int32
+        key_cols, val_cols = sdp.candidate_columns(w)
+        keys_sc[...] = jnp.stack(key_cols[:n_slots], axis=1)
+        valid_sc[...] = jnp.stack(val_cols[:n_slots], axis=1)
+        hits_sc[...] = jnp.zeros_like(hits_sc)
+
+    keys = keys_sc[...]                            # (bb, n_slots)
+    valid = valid_sc[...] > 0
+    tile = dict_ref[...].reshape(-1)               # (tile_rows * LANE,)
+
+    # which dictionary does tile j hold? static boundaries on the minor axis
+    dict_active = {"tri": j < tri_tiles,
+                   "quad": (j >= tri_tiles) & (j < tri_tiles + quad_tiles),
+                   "bi": j >= tri_tiles + quad_tiles}
+    slot_active = jnp.concatenate(
+        [jnp.broadcast_to(dict_active[GROUP_DICTS[g]], (N_CAND,))
+         for g in range(n_groups)])                # (n_slots,)
+
+    # ---- cheap tile-range reject: tiles are internally sorted ------------
+    in_range = ((keys >= tile[0]) & (keys <= tile[-1])
+                & valid & slot_active[None, :])
+
+    @pl.when(in_range.any())
+    def _compare():                                # stage 5a on this tile
+        hit_cols = []
+        for g in range(n_groups):
+            kg = keys[:, g * N_CAND : (g + 1) * N_CAND]
+            hit = (sm.bsearch_hit(tile, kg) if match == "bsearch"
+                   else _bank_hit(tile, kg))
+            hit_cols.append(hit & dict_active[GROUP_DICTS[g]])
+        hits = jnp.concatenate(hit_cols, axis=1) & valid
+        hits_sc[...] |= hits.astype(jnp.int32)
+
+    @pl.when(j == n_tiles - 1)
+    def _select():                                 # stage 5b, once per tile
+        _priority_select(keys, hits_sc[...], root_ref, src_ref,
+                         n_groups=n_groups)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("infix", "match", "block_b", "interpret"))
+    jax.jit, static_argnames=("infix", "match", "block_b", "residency",
+                              "dict_block_r", "interpret"))
 def stem_fused_pallas(
     words: jnp.ndarray,
     roots,
@@ -112,27 +203,37 @@ def stem_fused_pallas(
     infix: bool = True,
     match: str = "bsearch",
     block_b: int = 256,
+    residency: str = "auto",
+    dict_block_r: int = 8,
     interpret: bool = False,
 ):
     """words int32[B,16] + RootDictArrays -> (root int32[B,4], source int32[B]).
 
-    Single ``pallas_call``: grid is the batch tiling only; the packed
-    dictionaries are VMEM-resident across all grid steps (constant index
-    map). Bit-identical to ``core.stemmer.extract_roots`` (and pyref).
+    Single ``pallas_call`` either way; ``residency`` picks the dictionary
+    layout (DESIGN.md §5.3):
+
+      "resident"  grid = batch tiles only; the packed dictionaries ride
+                  along as constant-index-map VMEM blocks. Raises past
+                  MAX_RESIDENT_KEYS (it would thrash VMEM).
+      "streamed"  grid = (batch tiles, dict tiles); (dict_block_r x 128)
+                  tiles stream through VMEM while keys/valid/hit-mask
+                  persist in scratch — unbounded dictionary sizes.
+      "auto"      resident while the dictionaries fit, streamed beyond.
+
+    Bit-identical to ``core.stemmer.extract_roots`` (and pyref) in every
+    (residency, match) combination.
     """
     if match not in ("bank", "bsearch"):
         raise ValueError(f"unknown in-kernel match strategy: {match}")
     n_groups = 5 if infix else 2
+    residency = choose_residency(roots, residency)
 
     total_keys = sum(int(d.shape[0]) for d in (roots.tri, roots.quad, roots.bi))
-    if total_keys > MAX_RESIDENT_KEYS:
+    if residency == "resident" and total_keys > MAX_RESIDENT_KEYS:
         raise ValueError(
             f"dictionaries too large for VMEM residency ({total_keys} keys >"
-            f" {MAX_RESIDENT_KEYS}); stream stage 5 via stem_match instead"
+            f" {MAX_RESIDENT_KEYS}); use residency='streamed' or 'auto'"
             " (DESIGN.md §5.3)")
-
-    prep = sm.pad_dict_sorted if match == "bsearch" else sm.pad_dict_lanes
-    tri2, quad2, bi2 = prep(roots.tri), prep(roots.quad), prep(roots.bi)
 
     b = words.shape[0]
     if b == 0:  # degenerate batch: nothing to launch
@@ -140,24 +241,48 @@ def stem_fused_pallas(
     pad = (-b) % block_b
     wp = jnp.pad(words, ((0, pad), (0, 0)))
     bp = wp.shape[0]
-    grid = (bp // block_b,)
 
-    dict_spec = lambda d: pl.BlockSpec(d.shape, lambda i: (0, 0))
+    word_spec = pl.BlockSpec((block_b, ab.MAXLEN), lambda i, *j: (i, 0))
+    out_specs = [pl.BlockSpec((block_b, 4), lambda i, *j: (i, 0)),
+                 pl.BlockSpec((block_b, 1), lambda i, *j: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((bp, 4), jnp.int32),
+                 jax.ShapeDtypeStruct((bp, 1), jnp.int32)]
+
+    if residency == "resident":
+        prep = sm.pad_dict_sorted if match == "bsearch" else sm.pad_dict_lanes
+        tri2, quad2, bi2 = prep(roots.tri), prep(roots.quad), prep(roots.bi)
+        dict_spec = lambda d: pl.BlockSpec(d.shape, lambda i: (0, 0))
+        root, source = pl.pallas_call(
+            functools.partial(_fused_kernel, n_groups=n_groups, match=match),
+            grid=(bp // block_b,),
+            in_specs=[word_spec,
+                      dict_spec(tri2), dict_spec(quad2), dict_spec(bi2)],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(wp, tri2, quad2, bi2)
+        return root[:b], source[:b, 0]
+
+    # ---- streamed: minor grid axis sweeps [tri | quad | bi] dict tiles ---
+    dicts = [roots.tri, roots.quad] + ([roots.bi] if n_groups == 5 else [])
+    tiles = [sm.pad_dict_tiles(d, dict_block_r) for d in dicts]
+    counts = [t.shape[0] // dict_block_r for t in tiles]
+    tri_tiles, quad_tiles = counts[0], counts[1]
+    dict_stream = jnp.concatenate(tiles, axis=0)
+    n_slots = n_groups * N_CAND
+
     root, source = pl.pallas_call(
-        functools.partial(_fused_kernel, n_groups=n_groups, match=match),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, ab.MAXLEN), lambda i: (i, 0)),
-            dict_spec(tri2), dict_spec(quad2), dict_spec(bi2),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_b, 4), lambda i: (i, 0)),
-            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bp, 4), jnp.int32),
-            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
-        ],
+        functools.partial(_fused_streamed_kernel, n_groups=n_groups,
+                          match=match, tri_tiles=tri_tiles,
+                          quad_tiles=quad_tiles),
+        grid=(bp // block_b, sum(counts)),
+        in_specs=[word_spec,
+                  pl.BlockSpec((dict_block_r, sm.LANE), lambda i, j: (j, 0))],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((block_b, n_slots), jnp.int32),
+                        pltpu.VMEM((block_b, n_slots), jnp.int32),
+                        pltpu.VMEM((block_b, n_slots), jnp.int32)],
         interpret=interpret,
-    )(wp, tri2, quad2, bi2)
+    )(wp, dict_stream)
     return root[:b], source[:b, 0]

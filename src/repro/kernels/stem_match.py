@@ -55,6 +55,23 @@ def pad_dict_sorted(dict_keys: jnp.ndarray) -> jnp.ndarray:
                    constant_values=DICT_SENTINEL).reshape(-1, LANE)
 
 
+def pad_dict_tiles(dict_keys: jnp.ndarray, tile_rows: int) -> jnp.ndarray:
+    """Pad a *sorted* dictionary to a whole number of (tile_rows, LANE) tiles
+    with DICT_SENTINEL and reshape (n_tiles * tile_rows, LANE).
+
+    Sentinel padding on the right keeps every tile internally sorted, so a
+    consumer can binary-search each tile independently and use the tile's
+    first/last element as a [min, max] range reject (the streamed megakernel
+    Compare path, stem_fused._fused_streamed_kernel). Empty / placeholder
+    dictionaries still produce one full sentinel tile.
+    """
+    r = dict_keys.shape[0]
+    per_tile = tile_rows * LANE
+    rp = max(per_tile, ((r + per_tile - 1) // per_tile) * per_tile)
+    return jnp.pad(dict_keys, (0, rp - r),
+                   constant_values=DICT_SENTINEL).reshape(-1, LANE)
+
+
 def bsearch_hit(flat_dict: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
     """Membership via an unrolled branchless binary search.
 

@@ -46,6 +46,10 @@ class ServeEngine:
 
     # -- client API --------------------------------------------------------
     def submit(self, prompt, max_new: int = 16) -> int:
+        if max_new < 1:
+            # prefill always emits the first generated token, so the engine
+            # cannot return fewer than one token per request
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
@@ -95,19 +99,30 @@ class ServeEngine:
             nxt = int(np.asarray(jnp.argmax(logits[slot, -1], axis=-1)).reshape(-1)[0])
             req.tokens_out.append(nxt)
 
+    def _finish_slot(self, slot: int, req: Request):
+        req.done = True
+        self.finished[req.rid] = req
+        self.slot_req[slot] = None
+
     def step(self):
-        """One engine tick: admit from queue, decode all live slots."""
+        """One engine tick: admit from queue, decode all live slots.
+
+        Doneness is checked BEFORE decoding: a request admitted this tick
+        already holds its prefill-emitted token, so with max_new=1 it must
+        free its slot without an extra decode (it would otherwise return
+        max_new + 1 tokens).
+        """
         self._admit()
         for slot in range(self.B):
             req = self.slot_req[slot]
             if req is None:
                 continue
-            last = req.tokens_out[-1]
-            self._step_slot(slot, last, emit=True)
             if len(req.tokens_out) >= req.max_new:
-                req.done = True
-                self.finished[req.rid] = req
-                self.slot_req[slot] = None
+                self._finish_slot(slot, req)
+                continue
+            self._step_slot(slot, req.tokens_out[-1], emit=True)
+            if len(req.tokens_out) >= req.max_new:
+                self._finish_slot(slot, req)
 
     def run_until_drained(self, max_ticks: int = 1000):
         ticks = 0

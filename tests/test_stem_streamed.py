@@ -1,0 +1,223 @@
+"""Streamed-dictionary megakernel tests (DESIGN.md §5.3).
+
+Parity of the streamed Compare path against the resident layout and the
+core jnp stemmer across match strategy x infix x dictionary sizes
+straddling the old 64K-key VMEM ceiling; the residency="auto" policy;
+degenerate inputs; and the residency plumbing through the dist pipeline
+stage split and the autotuner.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import corpus, pyref, stemmer
+from repro.dist import pipeline as dist_pipeline
+from repro.kernels import ops
+from repro.kernels import stem_fused as sf
+
+MATCHES = ("bank", "bsearch")
+
+
+@pytest.fixture(scope="module")
+def small():
+    d = corpus.build_dictionary(n_tri=600, n_quad=80, seed=9)
+    return stemmer.RootDictArrays.from_rootdict(d)
+
+
+@pytest.fixture(scope="module")
+def big(small):
+    # ~100K keys: straddles MAX_RESIDENT_KEYS (64K) from above
+    da = corpus.grow_root_arrays(small, 100_000, seed=2)
+    total = sum(int(x.shape[0]) for x in (da.tri, da.quad, da.bi))
+    assert total > sf.MAX_RESIDENT_KEYS
+    return da
+
+
+@pytest.fixture(scope="module")
+def enc():
+    words, _, _ = corpus.build_corpus(n_words=384, seed=13)
+    return jnp.asarray(corpus.encode_corpus(words))
+
+
+# ---------------------------------------------------------------------------
+# parity: streamed == resident == core jnp, below and above the ceiling
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("match", MATCHES)
+@pytest.mark.parametrize("infix", [True, False])
+def test_streamed_matches_resident_small_dict(small, enc, infix, match):
+    ref = stemmer.stem_batch(enc, small, infix=infix)
+    res = ops.extract_roots_fused(enc, small, infix=infix, match=match,
+                                  residency="resident", interpret=True)
+    stm = ops.extract_roots_fused(enc, small, infix=infix, match=match,
+                                  residency="streamed", block_b=128,
+                                  dict_block_r=2, interpret=True)
+    for got in (res, stm):
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref[1]))
+
+
+@pytest.mark.parametrize("match", MATCHES)
+@pytest.mark.parametrize("infix", [True, False])
+def test_streamed_past_ceiling_matches_core(big, enc, infix, match):
+    """Above 64K keys the old path raised; streamed must be bit-identical
+    to the core sorted backend."""
+    ref = stemmer.stem_batch(enc, big, infix=infix)
+    got = ops.extract_roots_fused(enc, big, infix=infix, match=match,
+                                  residency="streamed", block_b=128,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref[1]))
+
+
+@pytest.mark.parametrize("dict_block_r", [1, 4, 16])
+def test_streamed_dict_tile_sweep(small, enc, dict_block_r):
+    ref = stemmer.stem_batch(enc, small)
+    got = ops.extract_roots_fused(enc, small, residency="streamed",
+                                  dict_block_r=dict_block_r, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref[1]))
+
+
+def test_256k_dictionary_through_public_api(small):
+    """The acceptance bar: extract_roots(backend="fused") with a 256K-key
+    dictionary succeeds (the old path raised) and is bit-identical to
+    backend="sorted"."""
+    da = corpus.grow_root_arrays(small, 262_144, seed=5)
+    total = sum(int(x.shape[0]) for x in (da.tri, da.quad, da.bi))
+    assert total >= 262_144
+    words, _, _ = corpus.build_corpus(n_words=192, seed=17)
+    e = jnp.asarray(corpus.encode_corpus(words))
+    r1, s1 = stemmer.extract_roots(e, da, backend="fused")   # auto -> streamed
+    r2, s2 = stemmer.extract_roots(e, da, backend="sorted")
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    assert (np.asarray(s1) != pyref.SRC_NONE).any()  # real hits occurred
+
+
+# ---------------------------------------------------------------------------
+# residency policy
+# ---------------------------------------------------------------------------
+def test_auto_residency_policy(small, big):
+    assert sf.choose_residency(small, "auto") == "resident"
+    assert sf.choose_residency(big, "auto") == "streamed"
+    assert sf.choose_residency(big, "streamed") == "streamed"
+    with pytest.raises(ValueError, match="residency"):
+        sf.choose_residency(small, "vmem")
+
+
+def test_explicit_resident_past_budget_raises(big, enc):
+    with pytest.raises(ValueError, match="VMEM residency"):
+        ops.extract_roots_fused(enc, big, residency="resident",
+                                interpret=True)
+
+
+def test_auto_streams_past_budget(big, enc):
+    """The old hard ValueError is gone: the default residency serves an
+    over-budget dictionary by streaming."""
+    ref = stemmer.stem_batch(enc, big)
+    got = ops.extract_roots_fused(enc, big, interpret=True)  # residency=auto
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref[1]))
+
+
+# ---------------------------------------------------------------------------
+# degenerate inputs
+# ---------------------------------------------------------------------------
+def test_streamed_empty_batch(small):
+    root, src = ops.extract_roots_fused(
+        jnp.zeros((0, 16), jnp.int32), small, residency="streamed",
+        interpret=True)
+    assert root.shape == (0, 4) and src.shape == (0,)
+
+
+@pytest.mark.parametrize("match", MATCHES)
+def test_streamed_empty_dict_groups(match, enc):
+    """Empty quad/bi groups pack to the [-1] placeholder; the streamed
+    sweep must neither match the placeholder nor mis-route groups."""
+    d = pyref.RootDict.from_words(
+        tri=["كتب", "درس", "لعب", "قول", "علم"], quad=[], bi=[])
+    da = stemmer.RootDictArrays.from_rootdict(d)
+    assert int(da.quad[0]) == -1 and int(da.bi[0]) == -1
+    ref = stemmer.stem_batch(enc, da)
+    got = ops.extract_roots_fused(enc, da, match=match, residency="streamed",
+                                  dict_block_r=2, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref[1]))
+
+
+def test_streamed_all_empty_dicts(enc):
+    da = stemmer.RootDictArrays.from_rootdict(pyref.RootDict.from_words())
+    root, src = ops.extract_roots_fused(enc, da, residency="streamed",
+                                        interpret=True)
+    assert (np.asarray(src) == pyref.SRC_NONE).all()
+    assert (np.asarray(root) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# residency through the public layers
+# ---------------------------------------------------------------------------
+def test_residency_through_stem_pipelined(big, enc):
+    r1, s1 = stemmer.stem_pipelined(enc, big, backend="fused",
+                                    residency="streamed", microbatch=128)
+    r2, s2 = stemmer.stem_batch(enc, big)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_residency_through_dist_stage_fns(big, enc):
+    """The 5-stage dist split with streamed Compare == stem_batch. Stage
+    fns are plain bundle->bundle functions, so parity needs no mesh."""
+    bundle = {
+        "words": enc,
+        "keys": jnp.zeros((enc.shape[0], 32), jnp.int32),
+        "valid": jnp.zeros((enc.shape[0], 32), jnp.int32),
+        "root": jnp.zeros((enc.shape[0], 4), jnp.int32),
+        "source": jnp.zeros((enc.shape[0],), jnp.int32),
+    }
+    for fn in dist_pipeline.stemmer_stage_fns(big, residency="streamed",
+                                              chunk_keys=4096):
+        bundle = fn(bundle)
+    ref_root, ref_src = stemmer.stem_batch(enc, big)
+    np.testing.assert_array_equal(np.asarray(bundle["root"]),
+                                  np.asarray(ref_root))
+    np.testing.assert_array_equal(np.asarray(bundle["source"]),
+                                  np.asarray(ref_src))
+
+
+def test_extended_plumbs_through_all_execution_models(small):
+    """stem_sequential / stem_pipelined must honour the extended rule pool
+    exactly like stem_batch (they used to silently drop it)."""
+    words, _, _ = corpus.build_corpus(n_words=48, seed=29)
+    e = jnp.asarray(corpus.encode_corpus(words))
+    ref = stemmer.stem_batch(e, small, extended=True)
+    seq = stemmer.stem_sequential(e, small, extended=True)
+    pip = stemmer.stem_pipelined(e, small, extended=True, microbatch=16)
+    for got in (seq, pip):
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref[1]))
+
+
+def test_autotune_covers_residency(small):
+    words, _, _ = corpus.build_corpus(n_words=128, seed=3)
+    e = jnp.asarray(corpus.encode_corpus(words))
+    cfg = ops.autotune_stem_fused(e, small, block_bs=(64,),
+                                  matches=("bsearch",),
+                                  residencies=("resident", "streamed"),
+                                  dict_block_rs=(2, 4), iters=1,
+                                  interpret=True)
+    assert cfg["residency"] in ("resident", "streamed")
+    assert cfg["dict_block_r"] >= 1
+    tuned = set(cfg["timings"])
+    assert (64, "bsearch", "resident", 0) in tuned
+    assert (64, "bsearch", "streamed", 2) in tuned
+    assert (64, "bsearch", "streamed", 4) in tuned
+
+
+def test_autotune_no_runnable_config_raises(big):
+    """Resident-only tuning of an over-budget dictionary must fail with a
+    pointer at the budget, not an opaque empty-min error."""
+    words, _, _ = corpus.build_corpus(n_words=64, seed=3)
+    e = jnp.asarray(corpus.encode_corpus(words))
+    with pytest.raises(ValueError, match="residency budget"):
+        ops.autotune_stem_fused(e, big, residencies=("resident",),
+                                iters=1, interpret=True)

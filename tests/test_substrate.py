@@ -175,6 +175,30 @@ def test_morph_lm_stream_shapes():
     assert b["tokens"].max() <= b["vocab"]
 
 
+def test_morph_lm_root_ids_align_with_chunk():
+    """Regression: each chunk must carry exactly the root ids of the words
+    whose characters appear in it, not the whole-batch array."""
+    from repro.core import corpus
+
+    pre = data_pipeline.MorphPreprocessor(n_tri=500, n_quad=60)
+    words, _, _ = corpus.build_corpus(n_words=64, seed=0)  # epoch-0 corpus
+    _, all_ids = pre(words)
+    it = data_pipeline.morph_lm_batches(batch_words=64, seq=32, preproc=pre)
+    spans = []
+    for _ in range(8):
+        b = next(it)
+        w0, w1 = b["word_span"]
+        assert 0 <= w0 < w1 <= len(words)
+        assert b["root_ids"].shape == (w1 - w0,)
+        assert w1 - w0 < len(words)  # the old bug shipped the whole batch
+        np.testing.assert_array_equal(b["root_ids"], all_ids[w0:w1])
+        spans.append((w0, w1))
+    # consecutive chunks advance through the corpus without gaps (the
+    # boundary word may straddle two chunks)
+    for (_, a1), (b0, _) in zip(spans, spans[1:]):
+        assert b0 in (a1 - 1, a1)
+
+
 # ---------------------------------------------------------------------------
 # serving engine
 # ---------------------------------------------------------------------------
@@ -190,6 +214,24 @@ def test_engine_continuous_batching(tiny):
         assert req is not None and req.done
         assert len(req.tokens_out) == 4
         assert all(0 <= t < cfg.vocab for t in req.tokens_out)
+
+
+def test_engine_max_new_exact(tiny):
+    """Regression: a freshly admitted slot used to get a same-tick decode
+    before its doneness check, so max_new=1 returned 2 tokens."""
+    cfg, params = tiny
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64)
+    rng = np.random.default_rng(1)
+    rids = {n: eng.submit(rng.integers(0, cfg.vocab, 4), max_new=n)
+            for n in (1, 2, 5)}
+    eng.run_until_drained()
+    for n, rid in rids.items():
+        req = eng.result(rid)
+        assert req is not None and req.done
+        assert len(req.tokens_out) == n, (n, req.tokens_out)
+    # prefill always emits one token, so max_new < 1 is unsatisfiable
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(np.asarray([1, 2], np.int32), max_new=0)
 
 
 def test_engine_matches_direct_decode(tiny):
