@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV lines:
   scaling_*      Fig 17  (throughput vs word count)
   dict_scaling_* §5.3    (resident vs streamed megakernel over
                           dictionary sizes 2K -> 256K keys)
+  serve_throughput_*     (serve-path words/sec through
+                          Engine + StemmerWorkload, queue depth x block_b)
   table6_*       Table 6 (accuracy ± infix processing)
   table7_*       Table 7 (per-root accuracy, top-frequency roots)
   compare_*      §6.4    (Compare-stage: linear vs sorted search)
@@ -35,6 +37,8 @@ SMOKE_PARAMS = {
     # 131072 keys > MAX_RESIDENT_KEYS: the smoke run always exercises one
     # streamed-dictionary configuration (CI fails if the section is absent)
     "dict_scaling": dict(sizes=(2048, 131072), n_words=512),
+    "serve_throughput": dict(queue_depths=(2, 4), block_bs=(32,),
+                             words_per_request=16, iters=1),
     "accuracy": dict(n_words=2000),
     "compare_stage": dict(n_keys=4096, dict_sizes=(512, 2048),
                           pallas_max_r=2048),
@@ -50,12 +54,13 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy_bench, compare_stage, dict_scaling,
-                            roofline, scaling, throughput)
+                            roofline, scaling, serve_throughput, throughput)
 
     sections = [
         ("throughput", throughput.main),
         ("scaling", scaling.main),
         ("dict_scaling", dict_scaling.main),
+        ("serve_throughput", serve_throughput.main),
         ("accuracy", accuracy_bench.main),
         ("compare_stage", compare_stage.main),
         ("roofline", roofline.main),

@@ -1,0 +1,81 @@
+"""Serve-path stemmer throughput: words/sec through Engine + StemmerWorkload.
+
+The raw megakernel numbers (throughput/scaling sections) measure one
+launch over a pre-formed batch; this section measures the full serving
+path — queue admission, FIFO tile coalescing across requests, one
+megakernel launch per tick, per-request scatter — over a (queue depth x
+block_b) sweep. The gap between a row's serve Wps and the raw
+single-launch Wps for the same tile size is the continuous-batching
+overhead the Engine adds on top of the kernel.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+
+from benchmarks.timing import bench as _bench
+from repro.core import corpus, stemmer
+from repro.kernels import ops
+from repro.serve import DictStore, Engine, StemmerWorkload
+
+
+def run(queue_depths=(4, 16, 64), block_bs=(128, 256),
+        words_per_request: int = 64, iters: int = 2):
+    d = corpus.build_dictionary(n_tri=1000, n_quad=120, seed=0)
+    arrays = stemmer.RootDictArrays.from_rootdict(d)
+    words, _, _ = corpus.build_corpus(
+        n_words=max(queue_depths) * words_per_request, seed=1)
+    enc = corpus.encode_corpus(words)
+
+    rows = []
+    for bb in block_bs:
+        # raw single-launch reference at this tile size (kernel ceiling) —
+        # same block_b/match/dict_block_r config StemmerWorkload launches
+        ref = jnp.asarray(enc[:bb])
+        dt_raw, _ = _bench(ops.extract_roots_fused, ref, arrays,
+                           block_b=bb, match="bsearch", dict_block_r=8,
+                           warmup=1, iters=iters)
+        for qd in queue_depths:
+            n_words = qd * words_per_request
+
+            def serve_once():
+                store = DictStore(arrays)
+                eng = Engine(StemmerWorkload(store, block_b=bb))
+                for i in range(qd):
+                    eng.submit(enc[i * words_per_request:
+                                   (i + 1) * words_per_request])
+                rep = eng.run_until_drained(
+                    max_ticks=max(1000, 2 * n_words // bb + 2))
+                assert rep.drained
+                return rep
+
+            rep = serve_once()  # warmup: compile + jit-cache fill
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                rep = serve_once()
+            dt = (time.perf_counter() - t0) / iters
+            rows.append({
+                "name": f"serve_throughput_q{qd}_b{bb}",
+                "queue_depth": qd,
+                "block_b": bb,
+                "words_per_request": words_per_request,
+                "n_words": n_words,
+                "ticks": rep.ticks,
+                "us_per_call": 1e6 * dt,
+                "wps": n_words / dt,
+                "raw_kernel_wps": bb / dt_raw,
+            })
+    return rows
+
+
+def main(**kw):
+    rows = run(**kw)
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.3f},"
+              f"{r['wps']:.1f}Wps_serve_vs_{r['raw_kernel_wps']:.1f}raw")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -22,11 +22,11 @@ def main():
     t0 = time.time()
     rids = [eng.submit(rng.integers(0, cfg.vocab, 6), max_new=6)
             for _ in range(7)]  # 7 requests share 3 slots
-    ticks = eng.run_until_drained()
+    rep = eng.run_until_drained()
     dt = time.time() - t0
 
     toks = sum(len(eng.result(r).tokens_out) for r in rids)
-    print(f"{len(rids)} requests, {toks} tokens, {ticks} ticks, "
+    print(f"{len(rids)} requests, {toks} tokens, {rep.ticks} ticks, "
           f"{toks/dt:.1f} tok/s")
     for rid in rids:
         print(f"  req {rid}: {eng.result(rid).tokens_out}")

@@ -60,6 +60,64 @@ class RootDictArrays:
 
         return RootDictArrays(tri=pack(d.tri), quad=pack(d.quad), bi=pack(d.bi))
 
+    @property
+    def n_keys(self) -> int:
+        return sum(int(d.shape[0]) for d in (self.tri, self.quad, self.bi))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class ResolvedRootDict:
+    """A RootDictArrays plus its *pre-resolved* megakernel residency.
+
+    Serving hot-swaps dictionaries between tile launches (see
+    serve/dict_store.py); resolving ``residency="auto"`` once at publish
+    time pins the kernel's static configuration, so a swap whose arrays
+    keep their shapes replays the existing jit trace instead of
+    re-tracing. The residency rides as pytree aux data: two handles with
+    equal shapes and equal residency hit the same cache entry.
+
+    Every stemmer entry point (``extract_roots``/``stem_batch``/... and
+    ``ops.extract_roots_fused``) accepts a handle anywhere it accepts
+    plain arrays; the handle's pinned residency wins over the call-site
+    default ("auto"), and conflicting explicit residencies raise.
+    """
+
+    arrays: RootDictArrays
+    residency: str  # "resident" | "streamed" — never "auto"
+
+    def tree_flatten(self):
+        return (self.arrays,), self.residency
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    @property
+    def n_keys(self) -> int:
+        return self.arrays.n_keys
+
+
+def resolve_dict(roots, *, residency: str = "auto") -> ResolvedRootDict:
+    """Pin a dictionary's residency against the VMEM budget once, up front."""
+    if isinstance(roots, ResolvedRootDict):
+        unwrap_dict(roots, residency)  # conflicting residency raises
+        return roots
+    from repro.kernels import stem_fused as sf  # lazy: kernels depend on core
+
+    return ResolvedRootDict(roots, sf.choose_residency(roots, residency))
+
+
+def unwrap_dict(roots, residency: str = "auto"):
+    """-> (RootDictArrays, residency); a handle's pinned residency wins."""
+    if isinstance(roots, ResolvedRootDict):
+        if residency not in ("auto", roots.residency):
+            raise ValueError(
+                f"residency={residency!r} conflicts with the resolved dict"
+                f" handle's pinned residency {roots.residency!r}")
+        return roots.arrays, roots.residency
+    return roots, residency
+
 
 # ---------------------------------------------------------------------------
 # Stages 1-2
@@ -174,6 +232,8 @@ def extract_roots(
 
     source uses pyref.SRC_* tags; root rows are zero-padded char codes.
     extended=True adds the beyond-paper rule pool (final ى→ي, hollow ا→ي).
+    roots may be plain RootDictArrays or a ResolvedRootDict handle whose
+    pinned residency then overrides the residency argument.
 
     backend selects the Compare stage implementation: "dense" / "sorted"
     (pure jnp), "pallas" (tiled comparator-bank kernel) or "fused" — the
@@ -186,6 +246,7 @@ def extract_roots(
     keeps the staged path and uses the megakernel's in-kernel sorted
     search for stage 5 only.
     """
+    roots, residency = unwrap_dict(roots, residency)
     if backend == "fused" and not extended:
         from repro.kernels import ops  # lazy: kernels depend on core
 

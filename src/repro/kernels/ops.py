@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pyref
+from repro.core import stemmer as core_stemmer
 from repro.kernels import ref as kref
 from repro.kernels import stem_datapath as sdp
 from repro.kernels import stem_fused as sf
@@ -68,6 +69,11 @@ def extract_roots_fused(words, roots, *, infix: bool = True,
     the batch sweep, "streamed" iterates (dict_block_r x 128) dictionary
     tiles over a minor grid axis (unbounded dictionary size), "auto"
     (default) streams only past stem_fused.MAX_RESIDENT_KEYS.
+
+    roots accepts plain RootDictArrays or a pre-resolved
+    core.stemmer.ResolvedRootDict handle (serving path): the handle's
+    pinned residency overrides the residency argument, so dictionary
+    hot swaps with matching shapes never re-trace.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -128,6 +134,7 @@ def autotune_stem_fused(words, roots, *, infix: bool = True,
     """
     if interpret is None:
         interpret = _interpret_default()
+    roots, _ = core_stemmer.unwrap_dict(roots)
     resident_ok = (sum(int(d.shape[0])
                        for d in (roots.tri, roots.quad, roots.bi))
                    <= sf.MAX_RESIDENT_KEYS)

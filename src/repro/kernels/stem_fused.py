@@ -52,6 +52,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import alphabet as ab
 from repro.core import pyref
+from repro.core import stemmer as core_stemmer
 from repro.kernels import stem_datapath as sdp
 from repro.kernels import stem_match as sm
 
@@ -222,10 +223,16 @@ def stem_fused_pallas(
 
     Bit-identical to ``core.stemmer.extract_roots`` (and pyref) in every
     (residency, match) combination.
+
+    ``roots`` also accepts a ``core.stemmer.ResolvedRootDict`` handle:
+    its pinned residency replaces the residency argument (serving
+    resolves "auto" once at dictionary-publish time, so a hot swap whose
+    arrays keep their shapes replays the cached trace).
     """
     if match not in ("bank", "bsearch"):
         raise ValueError(f"unknown in-kernel match strategy: {match}")
     n_groups = 5 if infix else 2
+    roots, residency = core_stemmer.unwrap_dict(roots, residency)
     residency = choose_residency(roots, residency)
 
     total_keys = sum(int(d.shape[0]) for d in (roots.tri, roots.quad, roots.bi))

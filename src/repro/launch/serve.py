@@ -1,6 +1,7 @@
-"""Serving launcher: continuous-batching engine over a smoke model.
+"""Serving launcher: workload-agnostic continuous-batching engine.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --workload lm --arch llama3-8b --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --workload stemmer --requests 16
 """
 from __future__ import annotations
 
@@ -13,21 +14,28 @@ import numpy as np
 from repro import configs
 from repro.models import model as model_mod
 from repro.models import params as pm
-from repro.serve.engine import ServeEngine
+from repro.serve import DictStore, Engine, LMDecodeWorkload, StemmerWorkload
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=8)
-    args = ap.parse_args()
+def required_cache_len(prompt_len: int, max_new: int) -> int:
+    """KV positions a request writes: prompt_len prefill steps plus
+    max_new - 1 decode steps (the last emitted token is never fed back)."""
+    return prompt_len + max_new - 1
+
+
+def serve_lm(args) -> None:
+    need = required_cache_len(args.prompt_len, args.max_new)
+    cache_len = args.cache_len if args.cache_len else need
+    if cache_len < need:
+        raise SystemExit(
+            f"--cache-len {cache_len} would overflow: prompt_len"
+            f" {args.prompt_len} + max_new {args.max_new} needs >= {need}"
+            " cache positions")
 
     cfg = configs.smoke_config(configs.get_config(args.arch))
     params = pm.init_params(model_mod.model_spec(cfg), jax.random.key(0))
-    eng = ServeEngine(cfg, params, max_batch=args.max_batch, cache_len=256)
+    eng = Engine(LMDecodeWorkload(cfg, params, max_batch=args.max_batch,
+                                  cache_len=cache_len))
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -36,13 +44,63 @@ def main():
                    max_new=args.max_new)
         for _ in range(args.requests)
     ]
-    ticks = eng.run_until_drained()
+    rep = eng.run_until_drained()
     dt = time.time() - t0
     total_tokens = sum(len(eng.result(r).tokens_out) for r in rids)
     print(f"served {args.requests} requests / {total_tokens} tokens in "
-          f"{dt:.2f}s ({total_tokens / dt:.1f} tok/s, {ticks} ticks)")
+          f"{dt:.2f}s ({total_tokens / dt:.1f} tok/s, {rep.ticks} ticks, "
+          f"cache_len {cache_len})")
     for rid in rids[:4]:
         print(f"  req {rid}: {eng.result(rid).tokens_out}")
+
+
+def serve_stemmer(args) -> None:
+    from repro.core import corpus, stemmer
+
+    d = corpus.build_dictionary(n_tri=1000, n_quad=120, seed=0)
+    store = DictStore(stemmer.RootDictArrays.from_rootdict(d))
+    eng = Engine(StemmerWorkload(store, block_b=args.block_b))
+
+    wpr = args.words_per_request
+    words, _, _ = corpus.build_corpus(n_words=args.requests * wpr, seed=1)
+    enc = corpus.encode_corpus(words)
+
+    t0 = time.time()
+    rids = [eng.submit(enc[i * wpr:(i + 1) * wpr])
+            for i in range(args.requests)]
+    rep = eng.run_until_drained()
+    dt = time.time() - t0
+    n_words = args.requests * wpr
+    print(f"served {args.requests} word-batch requests / {n_words} words in "
+          f"{dt:.2f}s ({n_words / dt:.1f} Wps, {rep.ticks} ticks, "
+          f"dict v{store.version}, block_b {args.block_b})")
+    for rid in rids[:2]:
+        req = eng.result(rid)
+        print(f"  req {rid}: {req.n_words} roots, dict v{req.dict_version}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("lm", "stemmer"), default="lm")
+    ap.add_argument("--requests", type=int, default=8)
+    # lm knobs
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=0,
+                    help="KV cache positions per slot (default: derived"
+                         " from --prompt-len + --max-new; explicit values"
+                         " too small for that are rejected)")
+    # stemmer knobs
+    ap.add_argument("--words-per-request", type=int, default=64)
+    ap.add_argument("--block-b", type=int, default=256)
+    args = ap.parse_args()
+
+    if args.workload == "stemmer":
+        serve_stemmer(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

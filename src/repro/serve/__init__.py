@@ -1,1 +1,16 @@
-"""repro.serve subpackage."""
+"""repro.serve subpackage: workload-agnostic continuous batching.
+
+Engine (scheduler) x Workload (LMDecodeWorkload | StemmerWorkload) +
+DictStore (versioned hot-swappable stemmer dictionaries). ServeEngine
+is the back-compat LM facade.
+"""
+from repro.serve.dict_store import DictStore, DictVersion
+from repro.serve.engine import (DrainReport, Engine, EngineUndrained,
+                                LMDecodeWorkload, Request, ServeEngine,
+                                StemRequest, StemmerWorkload, Workload)
+
+__all__ = [
+    "DictStore", "DictVersion", "DrainReport", "Engine", "EngineUndrained",
+    "LMDecodeWorkload", "Request", "ServeEngine", "StemRequest",
+    "StemmerWorkload", "Workload",
+]

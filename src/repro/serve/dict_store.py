@@ -1,0 +1,108 @@
+"""Versioned root-dictionary store for serving-time lexicon hot swaps.
+
+The streamed megakernel layout (DESIGN.md §5.3) keeps dictionary tiles
+in HBM, so swapping the lexicon between tile launches costs a device
+upload, not an engine restart. This module supplies the serving-side
+contract for that swap:
+
+  publish(arrays)  upload a new dictionary as the next monotonically
+                   increasing version; it becomes current atomically and
+                   is picked up by the *next* tile launch
+  acquire()        snapshot the current version; a tick holds its
+                   snapshot for the whole tile launch so a concurrent
+                   publish never changes a tile mid-flight
+
+Each version wraps its arrays in a ``core.stemmer.ResolvedRootDict``
+handle at publish time: residency="auto" is resolved against the VMEM
+budget once, so a swap whose arrays keep their shapes replays the
+megakernel's cached jit trace (no re-trace on the serving hot path).
+Responses record the version(s) that served them (StemRequest.dict_
+versions), and ``get(version)`` resolves any published version back to
+its arrays, so served roots stay auditable after further swaps.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+from repro.core import pyref
+from repro.core import stemmer as core_stemmer
+
+
+@dataclass(frozen=True)
+class DictVersion:
+    """One published dictionary: immutable (version, resolved handle)."""
+
+    version: int
+    handle: core_stemmer.ResolvedRootDict
+
+    @property
+    def arrays(self) -> core_stemmer.RootDictArrays:
+        return self.handle.arrays
+
+    @property
+    def n_keys(self) -> int:
+        return self.handle.n_keys
+
+
+class DictStore:
+    """Versioned RootDictArrays with publish/acquire semantics.
+
+    Versions start at 0 (the constructor publishes the initial
+    dictionary) and only ever grow. ``keep_history=False`` drops
+    superseded versions on publish for long-lived servers that don't
+    need ``get()`` on old versions.
+    """
+
+    def __init__(self, arrays, *, residency: str = "auto",
+                 keep_history: bool = True):
+        self._lock = threading.Lock()
+        self._residency = residency
+        self._keep_history = keep_history
+        self._versions: dict[int, DictVersion] = {}
+        self._current: DictVersion | None = None
+        self._next_version = 0
+        self.publish(arrays)
+
+    def publish(self, arrays) -> int:
+        """Upload a new lexicon; returns its version number.
+
+        Accepts packed RootDictArrays (or an already-resolved handle) or
+        a raw pyref.RootDict, which is packed here. The new version
+        becomes current atomically; in-flight ticks keep the snapshot
+        they acquired.
+        """
+        if isinstance(arrays, pyref.RootDict):
+            arrays = core_stemmer.RootDictArrays.from_rootdict(arrays)
+        handle = core_stemmer.resolve_dict(arrays, residency=self._residency)
+        with self._lock:
+            version = self._next_version
+            self._next_version += 1
+            dv = DictVersion(version, handle)
+            if not self._keep_history:
+                self._versions.clear()
+            self._versions[version] = dv
+            self._current = dv
+        return version
+
+    def acquire(self) -> DictVersion:
+        """Snapshot the current version (hold it for a whole tile launch)."""
+        with self._lock:
+            return self._current
+
+    def get(self, version: int) -> DictVersion:
+        """Resolve a previously published version (audit / parity checks)."""
+        with self._lock:
+            try:
+                return self._versions[version]
+            except KeyError:
+                raise KeyError(
+                    f"dict version {version} not in store (published so far:"
+                    f" {self._next_version}, keep_history="
+                    f"{self._keep_history})") from None
+
+    @property
+    def version(self) -> int:
+        """Version number of the current dictionary."""
+        with self._lock:
+            return self._current.version

@@ -1,22 +1,159 @@
-"""Serving engine: slot-based continuous batching over the jitted
-prefill/decode steps.
+"""Workload-agnostic serving core: queue/admit/finish continuous batching.
 
-Requests enter a fixed pool of B slots; prefill computes the prompt's KV
-(state) which is spliced into the slot's region of the batched cache;
-every engine step decodes one token for all live slots; finished slots
-free immediately for the next queued request (continuous batching).
+The scheduler (:class:`Engine`) owns what is generic about continuous
+batching — the FIFO request queue, rid allocation, admission while the
+workload has capacity, the finished table, and drain accounting. What a
+"tick" of work means is delegated to a :class:`Workload`:
+
+  LMDecodeWorkload   the LM decode path: a fixed pool of B slots,
+                     prefill-by-decode splicing the prompt's KV into the
+                     slot's region of the batched cache, one decoded
+                     token per live slot per tick, finished slots free
+                     immediately. Bit-identical to the pre-refactor
+                     ServeEngine (which remains as a facade).
+  StemmerWorkload    the paper's workload behind the same machinery:
+                     queued word-batch requests coalesce into one fixed
+                     [block_b, 16] tile per tick, ONE megakernel launch
+                     (ops.extract_roots_fused), roots/sources scattered
+                     back per request. The dictionary is acquired from a
+                     serve.dict_store.DictStore each tick, so lexicon
+                     hot swaps land between tile launches and every
+                     served word records the dict version that served it.
+
+Keeping the tile shape fixed means every tick replays the same jit
+trace; dictionary swaps with matching shapes also replay it (the
+DictStore pins residency in a ResolvedRootDict handle at publish time).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import alphabet as ab
 from repro.models import model as model_mod
 
 
+# ---------------------------------------------------------------------------
+# the workload contract
+# ---------------------------------------------------------------------------
+@runtime_checkable
+class Workload(Protocol):
+    """What the generic Engine needs from a servable workload."""
+
+    def make_request(self, rid: int, payload, **opts):
+        """Validate + wrap a submission; raise ValueError on bad configs."""
+
+    def has_capacity(self) -> bool:
+        """Can admit() take one more request right now?"""
+
+    def admit(self, request) -> None:
+        """Move a queued request in-flight (e.g. prefill into a slot)."""
+
+    def tick(self) -> list:
+        """Advance all in-flight work one step; return finished requests."""
+
+    @property
+    def active(self) -> int:
+        """Number of in-flight (admitted, unfinished) requests."""
+
+    def pending_rids(self) -> list[int]:
+        """rids of in-flight requests (for drain reports)."""
+
+
+# ---------------------------------------------------------------------------
+# drain accounting
+# ---------------------------------------------------------------------------
+@dataclass
+class DrainReport:
+    """Outcome of run_until_drained: ticks spent and what is still owed."""
+
+    ticks: int
+    drained: bool
+    pending: list[int]  # rids still queued or in flight
+
+
+class EngineUndrained(RuntimeError):
+    """max_ticks elapsed with requests still queued or in flight."""
+
+    def __init__(self, report: DrainReport):
+        self.report = report
+        super().__init__(
+            f"engine not drained after {report.ticks} ticks:"
+            f" {len(report.pending)} request(s) unfinished"
+            f" (rids {report.pending})")
+
+
+# ---------------------------------------------------------------------------
+# the generic scheduler
+# ---------------------------------------------------------------------------
+class Engine:
+    """Continuous batching over any Workload.
+
+    submit() validates through the workload and queues; step() admits
+    while the workload has capacity, then runs one workload tick;
+    finished requests move to the results table keyed by rid.
+    """
+
+    def __init__(self, workload: Workload):
+        self.workload = workload
+        self.queue: list = []
+        self.finished: dict[int, object] = {}
+        self._next_rid = 0
+
+    # -- client API --------------------------------------------------------
+    def submit(self, payload, **opts) -> int:
+        req = self.workload.make_request(self._next_rid, payload, **opts)
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(req)
+        return rid
+
+    def result(self, rid: int):
+        return self.finished.get(rid)
+
+    @property
+    def active(self) -> int:
+        return self.workload.active
+
+    # -- scheduling --------------------------------------------------------
+    def step(self):
+        """One engine tick: admit while there is capacity, then tick."""
+        while self.queue and self.workload.has_capacity():
+            self.workload.admit(self.queue.pop(0))
+        for req in self.workload.tick():
+            self.finished[req.rid] = req
+
+    def run_until_drained(self, max_ticks: int = 1000, *,
+                          on_undrained: str = "raise") -> DrainReport:
+        """Tick until queue + in-flight are empty, or max_ticks elapse.
+
+        Hitting max_ticks with work outstanding never silently drops it:
+        on_undrained="raise" (default) raises EngineUndrained carrying
+        the report; "return" hands back the report with drained=False
+        and the unfinished rids, leaving the engine resumable.
+        """
+        if on_undrained not in ("raise", "return"):
+            raise ValueError(f"unknown on_undrained policy: {on_undrained!r}")
+        ticks = 0
+        while (self.queue or self.workload.active) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        pending = ([r.rid for r in self.queue]
+                   + self.workload.pending_rids())
+        report = DrainReport(ticks=ticks, drained=not pending,
+                             pending=pending)
+        if pending and on_undrained == "raise":
+            raise EngineUndrained(report)
+        return report
+
+
+# ---------------------------------------------------------------------------
+# LM decode workload (the pre-refactor ServeEngine body)
+# ---------------------------------------------------------------------------
 @dataclass
 class Request:
     rid: int
@@ -26,49 +163,73 @@ class Request:
     done: bool = False
 
 
-class ServeEngine:
-    def __init__(self, cfg, params, *, max_batch: int = 4, cache_len: int = 128,
-                 greedy: bool = True):
+class LMDecodeWorkload:
+    """Slot-per-request greedy decode over the jitted decode step.
+
+    Requests enter a fixed pool of B slots; prefill computes the
+    prompt's KV (state) which is spliced into the slot's region of the
+    batched cache; every tick decodes one token for all live slots;
+    finished slots free immediately for the next queued request.
+    """
+
+    def __init__(self, cfg, params, *, max_batch: int = 4,
+                 cache_len: int = 128, greedy: bool = True):
         self.cfg = cfg
         self.params = params
         self.B = max_batch
         self.cache_len = cache_len
+        self.greedy = greedy
         self.caches = model_mod.init_caches(cfg, max_batch, cache_len)
         self.slot_req: list[Request | None] = [None] * max_batch
         self.slot_pos = np.zeros(max_batch, np.int32)   # next position
-        self.queue: list[Request] = []
-        self.finished: dict[int, Request] = {}
-        self._next_rid = 0
 
         self._decode = jax.jit(
             lambda p, tok, caches, pos: model_mod.decode_step(
                 p, cfg, tok, caches, pos))
 
-    # -- client API --------------------------------------------------------
-    def submit(self, prompt, max_new: int = 16) -> int:
+    # -- workload protocol -------------------------------------------------
+    def make_request(self, rid: int, prompt, *, max_new: int = 16) -> Request:
         if max_new < 1:
             # prefill always emits the first generated token, so the engine
             # cannot return fewer than one token per request
             raise ValueError(f"max_new must be >= 1, got {max_new}")
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
-        return rid
+        return Request(rid, np.asarray(prompt, np.int32), max_new)
 
-    def result(self, rid: int) -> Request | None:
-        return self.finished.get(rid)
+    def has_capacity(self) -> bool:
+        return any(r is None for r in self.slot_req)
+
+    def admit(self, req: Request):
+        self._prefill_into_slot(self.slot_req.index(None), req)
 
     @property
     def active(self) -> int:
         return sum(r is not None for r in self.slot_req)
 
-    # -- scheduling --------------------------------------------------------
-    def _admit(self):
-        for slot in range(self.B):
-            if self.slot_req[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                self._prefill_into_slot(slot, req)
+    def pending_rids(self) -> list[int]:
+        return [r.rid for r in self.slot_req if r is not None]
 
+    def tick(self) -> list[Request]:
+        """Decode one token for every live slot.
+
+        Doneness is checked BEFORE decoding: a request admitted this tick
+        already holds its prefill-emitted token, so with max_new=1 it must
+        free its slot without an extra decode (it would otherwise return
+        max_new + 1 tokens).
+        """
+        finished = []
+        for slot in range(self.B):
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            if len(req.tokens_out) >= req.max_new:
+                finished.append(self._finish_slot(slot, req))
+                continue
+            self._step_slot(slot, req.tokens_out[-1], emit=True)
+            if len(req.tokens_out) >= req.max_new:
+                finished.append(self._finish_slot(slot, req))
+        return finished
+
+    # -- decode machinery --------------------------------------------------
     def _prefill_into_slot(self, slot: int, req: Request):
         """Prompt tokens run through decode steps into this slot's cache.
 
@@ -99,37 +260,169 @@ class ServeEngine:
             nxt = int(np.asarray(jnp.argmax(logits[slot, -1], axis=-1)).reshape(-1)[0])
             req.tokens_out.append(nxt)
 
-    def _finish_slot(self, slot: int, req: Request):
+    def _finish_slot(self, slot: int, req: Request) -> Request:
         req.done = True
-        self.finished[req.rid] = req
         self.slot_req[slot] = None
+        return req
 
-    def step(self):
-        """One engine tick: admit from queue, decode all live slots.
 
-        Doneness is checked BEFORE decoding: a request admitted this tick
-        already holds its prefill-emitted token, so with max_new=1 it must
-        free its slot without an extra decode (it would otherwise return
-        max_new + 1 tokens).
-        """
-        self._admit()
-        for slot in range(self.B):
-            req = self.slot_req[slot]
-            if req is None:
-                continue
-            if len(req.tokens_out) >= req.max_new:
-                self._finish_slot(slot, req)
-                continue
-            self._step_slot(slot, req.tokens_out[-1], emit=True)
-            if len(req.tokens_out) >= req.max_new:
-                self._finish_slot(slot, req)
+# ---------------------------------------------------------------------------
+# stemmer workload: word-batch requests through the megakernel
+# ---------------------------------------------------------------------------
+@dataclass
+class StemRequest:
+    """A word-batch request and its (incrementally filled) response.
 
-    def run_until_drained(self, max_ticks: int = 1000):
-        ticks = 0
-        while (self.queue or self.active) and ticks < max_ticks:
-            self.step()
-            ticks += 1
-        return ticks
+    dict_versions[i] is the DictStore version whose tile launch served
+    word i — across a mid-stream publish() a single request may span two
+    versions, and the per-word record keeps served roots auditable
+    against exactly the lexicon that produced them.
+    """
+
+    rid: int
+    words: np.ndarray          # int32 [n, 16] encoded words
+    roots: np.ndarray          # int32 [n, 4] zero-padded char codes
+    sources: np.ndarray        # int32 [n] pyref.SRC_* tags
+    dict_versions: np.ndarray  # int32 [n] DictStore version per word
+    served: int = 0            # words completed so far
+    done: bool = False
+
+    @property
+    def n_words(self) -> int:
+        return int(self.words.shape[0])
+
+    @property
+    def dict_version(self) -> int | None:
+        """Version that served the request (the last word's, if a hot
+        swap landed mid-request; None for empty requests)."""
+        return int(self.dict_versions[-1]) if self.dict_versions.size else None
+
+
+class StemmerWorkload:
+    """Continuous batching of word-batch requests into megakernel tiles.
+
+    Every tick coalesces pending words from in-flight requests (FIFO, in
+    admission order) into ONE fixed [block_b, 16] tile, launches
+    ops.extract_roots_fused once, and scatters roots/sources back to the
+    per-request result arrays. Short final segments are zero-padded
+    (empty words are valid kernel inputs and cost nothing extra — the
+    tile shape never changes, so every tick replays the same jit trace).
+
+    The dictionary comes from a DictStore: acquired once per tick, so a
+    publish() between ticks is picked up by the next tile launch without
+    restarting the engine, and requests record the version(s) that
+    served them.
+    """
+
+    def __init__(self, store, *, block_b: int = 256, infix: bool = True,
+                 match: str = "bsearch", dict_block_r: int = 8,
+                 max_inflight: int | None = None,
+                 interpret: bool | None = None):
+        self.store = store
+        self.block_b = block_b
+        self.infix = infix
+        self.match = match
+        self.dict_block_r = dict_block_r
+        self.max_inflight = max_inflight
+        self.interpret = interpret
+        self.inflight: list[StemRequest] = []
+        self.ticks_launched = 0
+
+    # -- workload protocol -------------------------------------------------
+    def make_request(self, rid: int, words, **opts) -> StemRequest:
+        if opts:
+            raise ValueError(f"unknown stemmer request options: {sorted(opts)}")
+        if isinstance(words, np.ndarray):
+            if words.ndim != 2 or words.shape[1] != ab.MAXLEN:
+                raise ValueError(
+                    f"encoded word batch must be [n, {ab.MAXLEN}], got"
+                    f" {words.shape}")
+            enc = words.astype(np.int32, copy=True)
+        else:
+            enc = ab.encode_batch(list(words))  # raw strings
+        n = enc.shape[0]
+        return StemRequest(rid, enc,
+                           roots=np.zeros((n, 4), np.int32),
+                           sources=np.zeros(n, np.int32),
+                           dict_versions=np.zeros(n, np.int32))
+
+    def has_capacity(self) -> bool:
+        return (self.max_inflight is None
+                or len(self.inflight) < self.max_inflight)
+
+    def admit(self, req: StemRequest):
+        self.inflight.append(req)
+
+    @property
+    def active(self) -> int:
+        return len(self.inflight)
+
+    def pending_rids(self) -> list[int]:
+        return [r.rid for r in self.inflight]
+
+    def tick(self) -> list[StemRequest]:
+        segments = self._coalesce()
+        if segments:
+            self._launch(segments)
+        finished, still = [], []
+        for req in self.inflight:
+            if req.served >= req.n_words:   # includes empty requests
+                req.done = True
+                finished.append(req)
+            else:
+                still.append(req)
+        self.inflight = still
+        return finished
+
+    # -- tile machinery ----------------------------------------------------
+    def _coalesce(self) -> list[tuple[StemRequest, int, int, int]]:
+        """FIFO-fill one tile: -> [(req, req_start, tile_start, count)]."""
+        segments, fill = [], 0
+        for req in self.inflight:
+            if fill >= self.block_b:
+                break
+            take = min(req.n_words - req.served, self.block_b - fill)
+            if take > 0:
+                segments.append((req, req.served, fill, take))
+                fill += take
+        return segments
+
+    def _launch(self, segments):
+        from repro.kernels import ops  # lazy: keep engine import light
+
+        dv = self.store.acquire()       # one version per tile launch
+        tile = np.zeros((self.block_b, ab.MAXLEN), np.int32)
+        for req, r0, t0, take in segments:
+            tile[t0:t0 + take] = req.words[r0:r0 + take]
+        roots, sources = ops.extract_roots_fused(
+            jnp.asarray(tile), dv.handle, infix=self.infix, match=self.match,
+            block_b=self.block_b, dict_block_r=self.dict_block_r,
+            interpret=self.interpret)
+        roots, sources = np.asarray(roots), np.asarray(sources)
+        for req, r0, t0, take in segments:
+            req.roots[r0:r0 + take] = roots[t0:t0 + take]
+            req.sources[r0:r0 + take] = sources[t0:t0 + take]
+            req.dict_versions[r0:r0 + take] = dv.version
+            req.served += take
+        self.ticks_launched += 1
+
+
+# ---------------------------------------------------------------------------
+# back-compat facade
+# ---------------------------------------------------------------------------
+class ServeEngine(Engine):
+    """The original LM-serving entry point: Engine + LMDecodeWorkload.
+
+    Construction signature and decode outputs are unchanged from the
+    pre-refactor ServeEngine; run_until_drained now returns a
+    DrainReport and (per the undrained-work fix) raises EngineUndrained
+    instead of silently dropping queued requests at max_ticks.
+    """
+
+    def __init__(self, cfg, params, *, max_batch: int = 4,
+                 cache_len: int = 128, greedy: bool = True):
+        super().__init__(LMDecodeWorkload(cfg, params, max_batch=max_batch,
+                                          cache_len=cache_len, greedy=greedy))
 
 
 def _merge_slot(old, new, slot: int, batch: int | None = None):

@@ -1,0 +1,212 @@
+"""Serving-core tests: the workload-agnostic Engine, StemmerWorkload
+tile coalescing + bit-exact parity (including across a dictionary hot
+swap), DictStore versioning, resolved-dict re-trace avoidance, and the
+drain report / undrained-work surfacing."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import corpus, pyref, stemmer
+from repro.kernels import stem_fused as sf
+from repro.serve import (DictStore, DrainReport, Engine, EngineUndrained,
+                         StemmerWorkload, Workload)
+
+
+@pytest.fixture(scope="module")
+def dict_and_words():
+    d = corpus.build_dictionary(n_tri=400, n_quad=60, seed=0)
+    arrays = stemmer.RootDictArrays.from_rootdict(d)
+    words, _, _ = corpus.build_corpus(n_words=200, seed=1)
+    return arrays, corpus.encode_corpus(words)
+
+
+def _serve(store, enc, sizes, *, block_b=32, steps_before_swap=None,
+           swap_to=None, max_inflight=None):
+    """Submit word batches of the given sizes, optionally hot-swap, drain."""
+    eng = Engine(StemmerWorkload(store, block_b=block_b,
+                                 max_inflight=max_inflight))
+    off, rids = 0, []
+    for n in sizes:
+        rids.append(eng.submit(enc[off:off + n]))
+        off += n
+    if steps_before_swap is not None:
+        for _ in range(steps_before_swap):
+            eng.step()
+        store.publish(swap_to)
+    rep = eng.run_until_drained()
+    assert rep.drained
+    return eng, rids, rep
+
+
+# ---------------------------------------------------------------------------
+# StemmerWorkload parity + coalescing
+# ---------------------------------------------------------------------------
+def test_serve_parity_bit_identical(dict_and_words):
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    sizes = (37, 64, 5, 50)  # deliberately not block_b-aligned
+    eng, rids, rep = _serve(store, enc, sizes, block_b=32)
+
+    want_r, want_s = stemmer.stem_batch(jnp.asarray(enc[:sum(sizes)]), arrays)
+    want_r, want_s = np.asarray(want_r), np.asarray(want_s)
+    off = 0
+    for rid, n in zip(rids, sizes):
+        req = eng.result(rid)
+        assert req.done and req.n_words == n
+        np.testing.assert_array_equal(req.roots, want_r[off:off + n])
+        np.testing.assert_array_equal(req.sources, want_s[off:off + n])
+        assert (req.dict_versions == 0).all()
+        assert req.dict_version == 0
+        off += n
+
+
+def test_serve_coalesces_across_requests(dict_and_words):
+    """Many small requests share tiles: ticks == ceil(total / block_b),
+    not one tick per request."""
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    sizes = (10,) * 13  # 130 words
+    eng, rids, rep = _serve(store, enc, sizes, block_b=32)
+    assert eng.workload.ticks_launched == -(-130 // 32)  # 5 tiles
+    assert all(eng.result(r).done for r in rids)
+
+
+def test_serve_empty_request_completes(dict_and_words):
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    eng = Engine(StemmerWorkload(store, block_b=16))
+    rid_empty = eng.submit(np.zeros((0, 16), np.int32))
+    rid_real = eng.submit(enc[:8])
+    rep = eng.run_until_drained()
+    assert rep.drained
+    req = eng.result(rid_empty)
+    assert req.done and req.n_words == 0 and req.dict_version is None
+    assert eng.result(rid_real).done
+
+
+def test_serve_accepts_raw_strings(dict_and_words):
+    arrays, _ = dict_and_words
+    store = DictStore(arrays)
+    eng = Engine(StemmerWorkload(store, block_b=16))
+    words, _, _ = corpus.build_corpus(n_words=10, seed=3)
+    rid = eng.submit(words)  # list[str] encodes through alphabet
+    eng.run_until_drained()
+    req = eng.result(rid)
+    want_r, _ = stemmer.stem_batch(
+        jnp.asarray(corpus.encode_corpus(words)), arrays)
+    np.testing.assert_array_equal(req.roots, np.asarray(want_r))
+
+
+def test_stemmer_workload_satisfies_protocol(dict_and_words):
+    arrays, _ = dict_and_words
+    assert isinstance(StemmerWorkload(DictStore(arrays)), Workload)
+
+
+# ---------------------------------------------------------------------------
+# dictionary hot swap
+# ---------------------------------------------------------------------------
+def test_hot_swap_mid_stream_bit_identical(dict_and_words):
+    """A publish() between ticks is picked up by the next tile launch;
+    responses carry the version that served each word, and every word is
+    bit-identical to stem_batch under that version's arrays."""
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    grown = corpus.grow_root_arrays(arrays, 2048, seed=7)
+    sizes = (30, 30, 30, 30, 30)
+    eng, rids, _ = _serve(store, enc, sizes, block_b=32,
+                          steps_before_swap=2, swap_to=grown)
+
+    versions = np.concatenate([eng.result(r).dict_versions for r in rids])
+    assert set(versions.tolist()) == {0, 1}  # swap landed mid-stream
+    all_words = enc[:sum(sizes)]
+    got_r = np.concatenate([eng.result(r).roots for r in rids])
+    got_s = np.concatenate([eng.result(r).sources for r in rids])
+    for v in (0, 1):
+        mask = versions == v
+        want_r, want_s = stemmer.stem_batch(jnp.asarray(all_words[mask]),
+                                            store.get(v).arrays)
+        np.testing.assert_array_equal(got_r[mask], np.asarray(want_r))
+        np.testing.assert_array_equal(got_s[mask], np.asarray(want_s))
+    # a request straddling the swap reports the version of its last word
+    straddlers = [eng.result(r) for r in rids
+                  if len(set(eng.result(r).dict_versions.tolist())) > 1]
+    assert straddlers
+    for req in straddlers:
+        assert req.dict_version == int(req.dict_versions[-1]) == 1
+
+
+def test_same_shape_swap_replays_jit_trace(dict_and_words):
+    """A hot swap whose arrays keep their shapes must not re-trace the
+    megakernel: the DictStore's pre-resolved handle pins the static
+    config, so the jit cache is hit."""
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    _serve(store, enc, (40,), block_b=32)
+    before = sf.stem_fused_pallas._cache_size()
+
+    shifted = stemmer.RootDictArrays(tri=arrays.tri + 1, quad=arrays.quad + 1,
+                                     bi=arrays.bi + 1)  # same shapes, sorted
+    store.publish(shifted)
+    eng, rids, _ = _serve(store, enc, (40,), block_b=32)
+    assert sf.stem_fused_pallas._cache_size() == before
+    # and the swapped dictionary really was used
+    want_r, _ = stemmer.stem_batch(jnp.asarray(enc[:40]), shifted)
+    np.testing.assert_array_equal(eng.result(rids[0]).roots,
+                                  np.asarray(want_r))
+
+
+# ---------------------------------------------------------------------------
+# DictStore
+# ---------------------------------------------------------------------------
+def test_dict_store_versioning(dict_and_words):
+    arrays, _ = dict_and_words
+    store = DictStore(arrays)
+    assert store.version == 0
+    assert store.acquire().version == 0
+    assert store.acquire().handle.residency in ("resident", "streamed")
+
+    snapshot = store.acquire()  # held across a publish -> unchanged
+    grown = corpus.grow_root_arrays(arrays, 2048, seed=5)
+    assert store.publish(grown) == 1
+    assert store.version == 1
+    assert snapshot.version == 0
+    assert store.get(0).n_keys == arrays.n_keys
+    assert store.get(1).n_keys > store.get(0).n_keys
+    with pytest.raises(KeyError, match="version 9"):
+        store.get(9)
+
+    # raw pyref.RootDict publishes pack through from_rootdict
+    d = corpus.build_dictionary(n_tri=50, n_quad=10, seed=2)
+    assert isinstance(d, pyref.RootDict)
+    assert store.publish(d) == 2
+    assert store.get(2).arrays.tri.shape[0] > 0
+
+    no_hist = DictStore(arrays, keep_history=False)
+    no_hist.publish(grown)
+    with pytest.raises(KeyError):
+        no_hist.get(0)
+
+
+# ---------------------------------------------------------------------------
+# drain reporting (Engine-level, workload-independent)
+# ---------------------------------------------------------------------------
+def test_run_until_drained_surfaces_unfinished(dict_and_words):
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    eng = Engine(StemmerWorkload(store, block_b=16))
+    rids = [eng.submit(enc[:40]), eng.submit(enc[40:80])]
+
+    with pytest.raises(EngineUndrained) as exc:
+        eng.run_until_drained(max_ticks=1)  # 80 words need 5 ticks
+    report = exc.value.report
+    assert not report.drained and report.ticks == 1
+    assert set(report.pending) == set(rids)
+
+    # "return" policy hands back the report and leaves the engine resumable
+    partial = eng.run_until_drained(max_ticks=1, on_undrained="return")
+    assert isinstance(partial, DrainReport) and not partial.drained
+    final = eng.run_until_drained()
+    assert final.drained and final.pending == []
+    assert all(eng.result(r).done for r in rids)
+    with pytest.raises(ValueError, match="on_undrained"):
+        eng.run_until_drained(on_undrained="ignore")

@@ -12,6 +12,31 @@ def dicts():
     return d, stemmer.RootDictArrays.from_rootdict(d)
 
 
+def test_pack_unpack_keys_exhaustive_grid():
+    """Batched JAX pack_keys/unpack_keys round-trip every valid 6-bit
+    char code in every key position, plus the key-space corners, and
+    agree with the scalar alphabet.pack_key reference. (A randomized
+    hypothesis variant lives in test_properties.py; this grid keeps
+    coverage on hosts without hypothesis.)"""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    grid = np.zeros((4 * 64, 4), np.int32)
+    for p in range(4):
+        grid[p * 64:(p + 1) * 64, p] = np.arange(64)
+    corners = np.array([[0, 0, 0, 0], [63, 63, 63, 63], [63, 0, 63, 0],
+                        [0, 63, 0, 63], [1, 2, 3, 4]], np.int32)
+    codes = np.concatenate([grid, corners])
+    keys = np.asarray(stemmer.pack_keys(jnp.asarray(codes)))
+    assert ((keys >= 0) & (keys < 2**24)).all()
+    assert len(np.unique(keys[:4 * 64])) == 4 * 64 - 3  # all-zero row x4
+    np.testing.assert_array_equal(
+        np.asarray(ops.unpack_keys(jnp.asarray(keys))), codes)
+    for row, key in zip(codes.tolist(), keys.tolist()):
+        assert ab.pack_key(row) == key
+
+
 # ---------------------------------------------------------------------------
 # Paper worked examples (§3.1, §6.1)
 # ---------------------------------------------------------------------------
