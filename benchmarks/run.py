@@ -21,6 +21,12 @@ Flags:
   --smoke        reduced sizes for CI (CPU, interpret-mode kernels)
   --json PATH    where to write the JSON record (default
                  ./BENCH_stemmer.json; "-" disables)
+  --sections A,B run only the named sections (e.g. --sections
+                 serve_throughput to iterate on the serve sweep alone);
+                 untouched sections keep their rows in an existing JSON
+                 record instead of being dropped — unless the existing
+                 record's smoke flag differs (never mix smoke and
+                 full-size rows in one record)
 """
 from __future__ import annotations
 
@@ -37,8 +43,12 @@ SMOKE_PARAMS = {
     # 131072 keys > MAX_RESIDENT_KEYS: the smoke run always exercises one
     # streamed-dictionary configuration (CI fails if the section is absent)
     "dict_scaling": dict(sizes=(2048, 131072), n_words=512),
+    # both overlap=off (inflight 1) and overlap=on rows must exist in the
+    # smoke record (CI fails if either goes missing), plus the swap rows
     "serve_throughput": dict(queue_depths=(2, 4), block_bs=(32,),
-                             words_per_request=16, iters=1),
+                             words_per_request=16, iters=1,
+                             inflight_depths=(1, 2), device_counts=(1,),
+                             swap_keys=4096),
     "accuracy": dict(n_words=2000),
     "compare_stage": dict(n_keys=4096, dict_sizes=(512, 2048),
                           pallas_max_r=2048),
@@ -51,6 +61,10 @@ def main(argv=None) -> None:
                     help="reduced sizes for CI smoke runs")
     ap.add_argument("--json", default="BENCH_stemmer.json",
                     help='output path for the JSON record ("-" disables)')
+    ap.add_argument("--sections", default="",
+                    help="comma-separated section filter (default: all);"
+                         " unfiltered sections keep their existing rows"
+                         " in the JSON record")
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy_bench, compare_stage, dict_scaling,
@@ -65,8 +79,30 @@ def main(argv=None) -> None:
         ("compare_stage", compare_stage.main),
         ("roofline", roofline.main),
     ]
+    only = {s for s in args.sections.split(",") if s}
+    if only:
+        known = {name for name, _ in sections}
+        unknown = only - known
+        if unknown:
+            ap.error(f"unknown sections {sorted(unknown)}"
+                     f" (choose from {sorted(known)})")
+        sections = [(n, f) for n, f in sections if n in only]
     record: dict = {"schema": 1, "smoke": args.smoke,
                     "platform": platform.platform(), "sections": {}}
+    if only and args.json != "-" and Path(args.json).exists():
+        # partial rerun: keep the other sections' rows — but only when
+        # the old record was produced under the same smoke setting, so a
+        # record never silently mixes smoke and full-size rows
+        try:
+            old = json.load(open(args.json))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"bench_json_merge_skipped,0,unreadable_existing:{e}")
+        else:
+            if old.get("smoke") == args.smoke:
+                record["sections"] = dict(old.get("sections", {}))
+            else:
+                print("bench_json_merge_skipped,0,"
+                      f"smoke_mismatch_old={old.get('smoke')}")
     try:
         import jax
 

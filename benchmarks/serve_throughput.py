@@ -2,17 +2,27 @@
 
 The raw megakernel numbers (throughput/scaling sections) measure one
 launch over a pre-formed batch; this section measures the full serving
-path — queue admission, FIFO tile coalescing across requests, one
-megakernel launch per tick, per-request scatter — over a (queue depth x
-block_b) sweep. The gap between a row's serve Wps and the raw
-single-launch Wps for the same tile size is the continuous-batching
-overhead the Engine adds on top of the kernel.
+path — queue admission, FIFO super-tile coalescing across requests,
+megakernel launches through the dispatch/retire ring, per-request
+scatter — over an (overlap x inflight depth x device count x queue
+depth x block_b) sweep. ``inflight=1`` is the synchronous tick (overlap
+off); deeper rings overlap host coalescing/scatter with device compute,
+and the off-vs-on gap at equal queue depth is the host overhead the
+ring hides. ``devices>1`` rows (when the backend has them) shard each
+super-tile over a ("data",) mesh via dist.shard_batch.
+
+The section also measures dictionary swap latency: a whole-lexicon
+``publish()`` vs a sorted-merge ``publish_delta()`` of a few keys
+against the same lexicon (rows ``serve_swap_full_*`` /
+``serve_swap_delta_*``).
 """
 from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.timing import bench as _bench
 from repro.core import corpus, stemmer
@@ -20,60 +30,143 @@ from repro.kernels import ops
 from repro.serve import DictStore, Engine, StemmerWorkload
 
 
+def _serve_rows(arrays, enc, *, queue_depths, block_bs, inflight_depths,
+                device_counts, words_per_request, iters):
+    rows = []
+    avail = len(jax.devices())
+    for n_dev in device_counts:
+        if n_dev > avail:
+            print(f"serve_throughput_SKIP,0,devices_{n_dev}_gt_avail_{avail}")
+            continue
+        for bb in block_bs:
+            # raw single-launch reference at this tile size (kernel
+            # ceiling) — same config StemmerWorkload dispatches
+            ref = jnp.asarray(enc[:bb])
+            dt_raw, _ = _bench(ops.extract_roots_fused, ref, arrays,
+                               block_b=bb, match="bsearch", dict_block_r=8,
+                               warmup=1, iters=iters)
+            for depth in inflight_depths:
+                for qd in queue_depths:
+                    n_words = qd * words_per_request
+
+                    def serve_once():
+                        store = DictStore(arrays)
+                        eng = Engine(StemmerWorkload(
+                            store, block_b=bb, max_inflight=depth,
+                            data_devices=n_dev))
+                        for i in range(qd):
+                            eng.submit(enc[i * words_per_request:
+                                           (i + 1) * words_per_request])
+                        rep = eng.run_until_drained(
+                            max_ticks=max(1000, 2 * n_words // bb + 2))
+                        assert rep.drained
+                        return rep
+
+                    rep = serve_once()  # warmup: compile + jit-cache fill
+                    t0 = time.perf_counter()
+                    for _ in range(iters):
+                        rep = serve_once()
+                    dt = (time.perf_counter() - t0) / iters
+                    rows.append({
+                        "name": (f"serve_throughput_q{qd}_b{bb}"
+                                 f"_i{depth}_d{n_dev}"),
+                        "queue_depth": qd,
+                        "block_b": bb,
+                        "inflight": depth,
+                        "overlap": depth > 1,
+                        "devices": n_dev,
+                        "words_per_request": words_per_request,
+                        "n_words": n_words,
+                        "ticks": rep.ticks,
+                        "us_per_call": 1e6 * dt,
+                        "wps": n_words / dt,
+                        "raw_kernel_wps": bb / dt_raw,
+                    })
+    return rows
+
+
+def _swap_rows(arrays, *, swap_keys, iters):
+    """Dictionary swap latency: whole-table publish vs sorted-merge delta.
+
+    Both are measured against the same ``swap_keys``-key lexicon and both
+    end in a resolved, publishable version; the delta inserts/removes a
+    handful of keys, so its cost is one searchsorted merge + single-table
+    upload rather than re-uploading every table. On a CPU backend both
+    "uploads" are host memcpys, so the two rows land close together —
+    the delta's win shows up where upload bandwidth is the cost (real
+    accelerator interconnects); the rows exist to track that trajectory.
+    """
+    big = corpus.grow_root_arrays(arrays, swap_keys, seed=11)
+    # a real whole-lexicon swap arrives as host data: re-upload all three
+    # tables per publish (jnp.asarray of device-resident arrays would
+    # no-op and undersell the full path's cost)
+    host = {n: np.asarray(getattr(big, n)) for n in ("tri", "quad", "bi")}
+    quad = np.asarray(big.quad)
+    fresh = corpus._synthetic_keys(64, 4, seed=13, taken=set(quad.tolist()))
+    old = quad[:32].tolist()
+    # a delta drifts the store's current version, so time an alternating
+    # forward/reverse pair — every publish applies cleanly
+    fwd = {"insert": {"quad": fresh.tolist()}, "remove": {"quad": old}}
+    rev = {"insert": {"quad": old}, "remove": {"quad": fresh.tolist()}}
+    n_delta = len(fresh) + len(old)
+
+    def publish_full(store):
+        store.publish(stemmer.RootDictArrays(
+            tri=jnp.asarray(host["tri"]), quad=jnp.asarray(host["quad"]),
+            bi=jnp.asarray(host["bi"])))
+
+    store = DictStore(big)
+    rows = []
+    for kind in ("full", "delta"):
+        # warmup one publish of each kind (jit residency resolve etc.)
+        if kind == "full":
+            publish_full(store)
+        else:
+            store.publish_delta(**fwd)
+        t0 = time.perf_counter()
+        for i in range(2 * iters):
+            if kind == "full":
+                publish_full(store)
+            else:
+                store.publish_delta(**(rev if i % 2 == 0 else fwd))
+        dt = (time.perf_counter() - t0) / (2 * iters)
+        rows.append({
+            "name": f"serve_swap_{kind}_{big.n_keys}",
+            "swap": kind,
+            "n_keys": int(big.n_keys),
+            "delta_keys": n_delta if kind == "delta" else int(big.n_keys),
+            "us_per_call": 1e6 * dt,
+        })
+    return rows
+
+
 def run(queue_depths=(4, 16, 64), block_bs=(128, 256),
-        words_per_request: int = 64, iters: int = 2):
+        words_per_request: int = 64, iters: int = 2,
+        inflight_depths=(1, 2, 4), device_counts=(1,),
+        swap_keys: int = 32768):
     d = corpus.build_dictionary(n_tri=1000, n_quad=120, seed=0)
     arrays = stemmer.RootDictArrays.from_rootdict(d)
     words, _, _ = corpus.build_corpus(
         n_words=max(queue_depths) * words_per_request, seed=1)
     enc = corpus.encode_corpus(words)
 
-    rows = []
-    for bb in block_bs:
-        # raw single-launch reference at this tile size (kernel ceiling) —
-        # same block_b/match/dict_block_r config StemmerWorkload launches
-        ref = jnp.asarray(enc[:bb])
-        dt_raw, _ = _bench(ops.extract_roots_fused, ref, arrays,
-                           block_b=bb, match="bsearch", dict_block_r=8,
-                           warmup=1, iters=iters)
-        for qd in queue_depths:
-            n_words = qd * words_per_request
-
-            def serve_once():
-                store = DictStore(arrays)
-                eng = Engine(StemmerWorkload(store, block_b=bb))
-                for i in range(qd):
-                    eng.submit(enc[i * words_per_request:
-                                   (i + 1) * words_per_request])
-                rep = eng.run_until_drained(
-                    max_ticks=max(1000, 2 * n_words // bb + 2))
-                assert rep.drained
-                return rep
-
-            rep = serve_once()  # warmup: compile + jit-cache fill
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                rep = serve_once()
-            dt = (time.perf_counter() - t0) / iters
-            rows.append({
-                "name": f"serve_throughput_q{qd}_b{bb}",
-                "queue_depth": qd,
-                "block_b": bb,
-                "words_per_request": words_per_request,
-                "n_words": n_words,
-                "ticks": rep.ticks,
-                "us_per_call": 1e6 * dt,
-                "wps": n_words / dt,
-                "raw_kernel_wps": bb / dt_raw,
-            })
+    rows = _serve_rows(arrays, enc, queue_depths=queue_depths,
+                       block_bs=block_bs, inflight_depths=inflight_depths,
+                       device_counts=device_counts,
+                       words_per_request=words_per_request, iters=iters)
+    rows += _swap_rows(arrays, swap_keys=swap_keys, iters=iters)
     return rows
 
 
 def main(**kw):
     rows = run(**kw)
     for r in rows:
-        print(f"{r['name']},{r['us_per_call']:.3f},"
-              f"{r['wps']:.1f}Wps_serve_vs_{r['raw_kernel_wps']:.1f}raw")
+        if "wps" in r:
+            print(f"{r['name']},{r['us_per_call']:.3f},"
+                  f"{r['wps']:.1f}Wps_serve_vs_{r['raw_kernel_wps']:.1f}raw")
+        else:
+            print(f"{r['name']},{r['us_per_call']:.3f},"
+                  f"swap_{r['swap']}_{r['n_keys']}keys")
     return rows
 
 

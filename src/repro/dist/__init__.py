@@ -1,7 +1,13 @@
-"""Distribution substrate: stage pipelining, sharding rules, grad compression.
+"""Distribution substrate: stage pipelining, data sharding, grad compression.
 
   pipeline     single-host/device-mesh microbatched stage pipeline — the
                paper's pipelined processor mapped onto a mesh axis
+  shard_batch  data-sharded megakernel launches: one [n_dev * block_b, 16]
+               super-tile split across a mesh axis per launch (the
+               serving multi-device path; also exported as a function)
   sharding     logical-axis -> mesh-axis resolver for the ParamSpec system
   compression  int8 error-feedback gradient compression
 """
+from repro.dist.shard_batch import mesh_axis_size, shard_batch
+
+__all__ = ["mesh_axis_size", "shard_batch"]

@@ -1,0 +1,84 @@
+"""Data-sharded megakernel launches: one super-tile per tick, split
+across a mesh axis.
+
+The paper scales the pipelined processor by adding parallel hardware;
+the serving analogue is a *data* axis: one ``[n_dev * block_b, 16]``
+super-tile per launch, ``shard_map`` slicing it into per-device
+``[block_b, 16]`` tiles that run :func:`kernels.stem_fused.
+stem_fused_pallas` concurrently, with the packed dictionaries
+replicated on every device. The StemmerWorkload dispatch path selects
+this with ``data_devices=N`` (see serve/engine.py); standalone callers
+get the same contract as ``ops.extract_roots_fused`` — bit-identical to
+``core.stemmer.stem_batch``, ragged batches padded and sliced back.
+
+The jitted body is keyed on the (hashable) Mesh plus the kernel's
+static config, so serving replays one trace per (mesh, tile shape,
+dictionary shape, residency) — a dictionary hot swap with matching
+shapes never re-traces, exactly as on the single-device path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import stemmer as core_stemmer
+from repro.kernels import stem_fused as sf
+
+
+def mesh_axis_size(mesh, axis: str) -> int:
+    """Size of ``axis`` in ``mesh`` (duck-typed via sharding.axis_sizes)."""
+    from repro.dist import sharding
+
+    sizes = sharding.axis_sizes(mesh)
+    if axis not in sizes:
+        raise ValueError(
+            f"mesh has no axis {axis!r} (axes: {tuple(mesh.axis_names)})")
+    return int(sizes[axis])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "infix", "match", "block_b",
+                     "residency", "dict_block_r", "interpret"))
+def _shard_call(words, roots, *, mesh, axis, infix, match, block_b,
+                residency, dict_block_r, interpret):
+    n_dev = mesh_axis_size(mesh, axis)
+    b = words.shape[0]
+    pad = (-b) % (n_dev * block_b)
+    wp = jnp.pad(words, ((0, pad), (0, 0)))
+
+    def local(w, r):
+        return sf.stem_fused_pallas(
+            w, r, infix=infix, match=match, block_b=block_b,
+            residency=residency, dict_block_r=dict_block_r,
+            interpret=interpret)
+
+    f = shard_map(local, mesh=mesh, in_specs=(P(axis), P()),
+                  out_specs=(P(axis), P(axis)), check_rep=False)
+    root, source = f(wp, roots)
+    return root[:b], source[:b]
+
+
+def shard_batch(words, roots, mesh, *, axis: str = "data",
+                infix: bool = True, match: str = "bsearch",
+                block_b: int = 256, residency: str = "auto",
+                dict_block_r: int = 8, interpret: bool = False):
+    """words int32[B,16] -> (root int32[B,4], source int32[B]), B split
+    over ``mesh[axis]``.
+
+    Same contract as ``ops.extract_roots_fused``; ``roots`` accepts
+    plain RootDictArrays or a pre-resolved ``ResolvedRootDict`` handle
+    (the serving path — its pinned residency wins, so hot swaps with
+    matching shapes replay the cached trace). B is padded up to a
+    multiple of ``n_dev * block_b`` and sliced back, so ragged final
+    super-tiles are valid.
+    """
+    roots, residency = core_stemmer.unwrap_dict(roots, residency)
+    residency = sf.choose_residency(roots, residency)
+    return _shard_call(words, roots, mesh=mesh, axis=axis, infix=infix,
+                       match=match, block_b=block_b, residency=residency,
+                       dict_block_r=dict_block_r, interpret=interpret)

@@ -37,6 +37,13 @@ GROUPS = {
 _REPLICATED = {"layers", "blocks", "cross_blocks", None}
 
 
+def axis_sizes(mesh) -> dict:
+    """Duck-typed mesh -> {axis name: device count}. The single place
+    mesh introspection happens (resolve() and dist.shard_batch both go
+    through it), reading only ``axis_names`` and ``devices.shape``."""
+    return dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+
+
 def resolve(axes, shape, mesh) -> P:
     """(logical axes, dim sizes, mesh) -> PartitionSpec.
 
@@ -44,7 +51,7 @@ def resolve(axes, shape, mesh) -> P:
     cannot shard cleanly replicates rather than erroring, so one spec
     tree serves every mesh geometry.
     """
-    sizes = dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+    sizes = axis_sizes(mesh)
     used: set = set()
     entries = []
     for name, dim in zip(axes, shape):

@@ -83,6 +83,27 @@ def extract_roots_fused(words, roots, *, infix: bool = True,
                                 interpret=interpret)
 
 
+def extract_roots_sharded(words, roots, mesh, *, axis: str = "data",
+                          infix: bool = True, match: str = "bsearch",
+                          block_b: int = 256, residency: str = "auto",
+                          dict_block_r: int = 8,
+                          interpret: bool | None = None):
+    """Megakernel launch data-sharded over ``mesh[axis]``: the batch is
+    split into per-device [block_b, 16] tiles (one super-tile of
+    ``n_dev * block_b`` words per launch at full occupancy), the packed
+    dictionaries replicated. Same contract as :func:`extract_roots_fused`
+    — bit-identical, ragged batches padded and sliced back. This is the
+    serving path behind ``StemmerWorkload(data_devices=N)``.
+    """
+    from repro.dist import shard_batch  # lazy: dist builds on kernels
+
+    if interpret is None:
+        interpret = _interpret_default()
+    return shard_batch(words, roots, mesh, axis=axis, infix=infix,
+                       match=match, block_b=block_b, residency=residency,
+                       dict_block_r=dict_block_r, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("infix", "interpret"))
 def extract_roots_multilaunch(words, roots, *, infix: bool = True,
                               interpret: bool | None = None):

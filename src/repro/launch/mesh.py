@@ -20,3 +20,19 @@ def make_local_mesh(model: int = 1):
     """Small mesh over the actually-available devices (tests/examples)."""
     n = len(jax.devices())
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_data_mesh(n_dev: int | None = None):
+    """1-D ("data",) mesh over the first ``n_dev`` devices (default: all).
+
+    The serving tile shard path (dist.shard_batch / StemmerWorkload
+    ``data_devices=N``) splits one [n_dev * block_b, 16] super-tile per
+    launch along this axis.
+    """
+    avail = len(jax.devices())
+    if n_dev is None:
+        n_dev = avail
+    if not 1 <= n_dev <= avail:
+        raise ValueError(
+            f"data mesh needs 1 <= n_dev <= {avail} devices, got {n_dev}")
+    return jax.make_mesh((n_dev,), ("data",))

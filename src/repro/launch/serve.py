@@ -59,7 +59,9 @@ def serve_stemmer(args) -> None:
 
     d = corpus.build_dictionary(n_tri=1000, n_quad=120, seed=0)
     store = DictStore(stemmer.RootDictArrays.from_rootdict(d))
-    eng = Engine(StemmerWorkload(store, block_b=args.block_b))
+    eng = Engine(StemmerWorkload(store, block_b=args.block_b,
+                                 max_inflight=args.inflight,
+                                 data_devices=args.devices))
 
     wpr = args.words_per_request
     words, _, _ = corpus.build_corpus(n_words=args.requests * wpr, seed=1)
@@ -73,7 +75,9 @@ def serve_stemmer(args) -> None:
     n_words = args.requests * wpr
     print(f"served {args.requests} word-batch requests / {n_words} words in "
           f"{dt:.2f}s ({n_words / dt:.1f} Wps, {rep.ticks} ticks, "
-          f"dict v{store.version}, block_b {args.block_b})")
+          f"{eng.workload.ticks_launched} launches, dict v{store.version}, "
+          f"super-tile {args.devices}x{args.block_b}, "
+          f"inflight {args.inflight})")
     for rid in rids[:2]:
         req = eng.result(rid)
         print(f"  req {rid}: {req.n_words} roots, dict v{req.dict_version}")
@@ -95,6 +99,13 @@ def main():
     # stemmer knobs
     ap.add_argument("--words-per-request", type=int, default=64)
     ap.add_argument("--block-b", type=int, default=256)
+    ap.add_argument("--inflight", type=int, default=2,
+                    help="dispatch ring depth: outstanding megakernel"
+                         " launches (1 = synchronous tick, overlap off)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="data devices per super-tile: each launch is a"
+                         " [devices * block_b, 16] tile shard_map'd over"
+                         " a ('data',) mesh (dist.shard_batch)")
     args = ap.parse_args()
 
     if args.workload == "stemmer":

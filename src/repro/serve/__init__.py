@@ -6,11 +6,12 @@ is the back-compat LM facade.
 """
 from repro.serve.dict_store import DictStore, DictVersion
 from repro.serve.engine import (DrainReport, Engine, EngineUndrained,
-                                LMDecodeWorkload, Request, ServeEngine,
-                                StemRequest, StemmerWorkload, Workload)
+                                InflightTile, LMDecodeWorkload, Request,
+                                ServeEngine, StemRequest, StemmerWorkload,
+                                Workload)
 
 __all__ = [
     "DictStore", "DictVersion", "DrainReport", "Engine", "EngineUndrained",
-    "LMDecodeWorkload", "Request", "ServeEngine", "StemRequest",
-    "StemmerWorkload", "Workload",
+    "InflightTile", "LMDecodeWorkload", "Request", "ServeEngine",
+    "StemRequest", "StemmerWorkload", "Workload",
 ]

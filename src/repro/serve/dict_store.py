@@ -8,9 +8,13 @@ contract for that swap:
   publish(arrays)  upload a new dictionary as the next monotonically
                    increasing version; it becomes current atomically and
                    is picked up by the *next* tile launch
-  acquire()        snapshot the current version; a tick holds its
-                   snapshot for the whole tile launch so a concurrent
-                   publish never changes a tile mid-flight
+  publish_delta()  the same, but as insert/remove key lists sorted-merged
+                   against the current version — untouched tables keep
+                   their device arrays instead of re-uploading
+  acquire()        snapshot the current version; a dispatch holds its
+                   snapshot for the whole tile launch (and through
+                   retire), so a concurrent publish never changes — or
+                   relabels — a tile in flight
 
 Each version wraps its arrays in a ``core.stemmer.ResolvedRootDict``
 handle at publish time: residency="auto" is resolved against the VMEM
@@ -25,8 +29,33 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass
 
+import numpy as np
+
+from repro.core import alphabet as ab
 from repro.core import pyref
 from repro.core import stemmer as core_stemmer
+
+TABLES = ("tri", "quad", "bi")
+
+
+def _sorted_member(haystack: np.ndarray, needles: np.ndarray) -> np.ndarray:
+    """Membership of sorted ``needles`` in sorted ``haystack`` via one
+    searchsorted pass (no re-sort, unlike np.isin/setdiff1d)."""
+    if not haystack.size:
+        return np.zeros(needles.shape, bool)
+    at = np.minimum(np.searchsorted(haystack, needles), haystack.size - 1)
+    return haystack[at] == needles
+
+
+def _delta_keys(spec) -> np.ndarray:
+    """Delta key list -> sorted unique packed int32 keys. Raw root
+    strings encode through the alphabet (pack_key takes dense *codes*,
+    not characters); packed ints pass through."""
+    if spec is None:
+        return np.zeros(0, np.int32)
+    keys = [ab.pack_key(ab.encode_word(k)) if isinstance(k, str) else int(k)
+            for k in spec]
+    return np.unique(np.asarray(keys, np.int32)) if keys else np.zeros(0, np.int32)
 
 
 @dataclass(frozen=True)
@@ -56,7 +85,8 @@ class DictStore:
 
     def __init__(self, arrays, *, residency: str = "auto",
                  keep_history: bool = True):
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()       # guards the version table
+        self._pub_lock = threading.Lock()   # serialises publishers
         self._residency = residency
         self._keep_history = keep_history
         self._versions: dict[int, DictVersion] = {}
@@ -64,17 +94,7 @@ class DictStore:
         self._next_version = 0
         self.publish(arrays)
 
-    def publish(self, arrays) -> int:
-        """Upload a new lexicon; returns its version number.
-
-        Accepts packed RootDictArrays (or an already-resolved handle) or
-        a raw pyref.RootDict, which is packed here. The new version
-        becomes current atomically; in-flight ticks keep the snapshot
-        they acquired.
-        """
-        if isinstance(arrays, pyref.RootDict):
-            arrays = core_stemmer.RootDictArrays.from_rootdict(arrays)
-        handle = core_stemmer.resolve_dict(arrays, residency=self._residency)
+    def _install(self, handle: core_stemmer.ResolvedRootDict) -> int:
         with self._lock:
             version = self._next_version
             self._next_version += 1
@@ -84,6 +104,87 @@ class DictStore:
             self._versions[version] = dv
             self._current = dv
         return version
+
+    def publish(self, arrays) -> int:
+        """Upload a new lexicon; returns its version number.
+
+        Accepts packed RootDictArrays (or an already-resolved handle) or
+        a raw pyref.RootDict, which is packed here. The new version
+        becomes current atomically; in-flight ticks keep the snapshot
+        they acquired.
+        """
+        with self._pub_lock:
+            if isinstance(arrays, pyref.RootDict):
+                arrays = core_stemmer.RootDictArrays.from_rootdict(arrays)
+            handle = core_stemmer.resolve_dict(arrays,
+                                               residency=self._residency)
+            return self._install(handle)
+
+    def publish_delta(self, insert=None, remove=None) -> int:
+        """Publish the next version as a sorted-merge delta against the
+        current one; returns the new version number.
+
+        ``insert`` / ``remove`` map table names ("tri" / "quad" / "bi")
+        to key lists — packed int32 keys or raw root strings (encoded
+        and packed through the alphabet). Only the touched tables are
+        merged on the host and re-uploaded; untouched tables share the
+        version's device arrays, so for large lexicons a small delta
+        costs O(delta + touched table) instead of a whole-lexicon
+        re-upload (the swap-latency rows in
+        benchmarks/serve_throughput.py measure the difference).
+
+        Removing a key that is not present raises ValueError (a delta
+        that doesn't apply cleanly is a caller bug, not a no-op), as
+        does a key appearing in both lists for the same table. Inserting
+        an already-present key is idempotent.
+        """
+        insert = dict(insert or {})
+        remove = dict(remove or {})
+        unknown = (set(insert) | set(remove)) - set(TABLES)
+        if unknown:
+            raise ValueError(f"unknown dictionary tables: {sorted(unknown)}"
+                             f" (want subset of {TABLES})")
+        import jax.numpy as jnp
+
+        with self._pub_lock:
+            cur = self.acquire().arrays
+            merged = {}
+            for name in TABLES:
+                ins = _delta_keys(insert.get(name))
+                rem = _delta_keys(remove.get(name))
+                old = getattr(cur, name)
+                if not ins.size and not rem.size:
+                    merged[name] = old      # untouched: same device buffer
+                    continue
+                both = np.intersect1d(ins, rem)
+                if both.size:
+                    raise ValueError(
+                        f"{name}: keys {both.tolist()} appear in both"
+                        " insert and remove")
+                host = np.asarray(old)
+                host = host[host >= 0]      # drop the empty-table sentinel
+                # both sides are sorted: one searchsorted pass per list
+                # (no re-sort of the table, unlike union1d/setdiff1d)
+                if rem.size:
+                    found = _sorted_member(host, rem)
+                    if not found.all():
+                        raise ValueError(
+                            f"{name}: cannot remove absent keys"
+                            f" {rem[~found].tolist()}")
+                    keep = np.ones(host.size, bool)
+                    keep[np.searchsorted(host, rem)] = False
+                    host = host[keep]
+                if ins.size:
+                    ins = ins[~_sorted_member(host, ins)]  # idempotent
+                    host = np.insert(host, np.searchsorted(host, ins), ins)
+                out = host.astype(np.int32)
+                if not out.size:
+                    out = np.asarray([-1], np.int32)  # empty-table sentinel
+                merged[name] = jnp.asarray(out)
+            arrays = core_stemmer.RootDictArrays(**merged)
+            handle = core_stemmer.resolve_dict(arrays,
+                                               residency=self._residency)
+            return self._install(handle)
 
     def acquire(self) -> DictVersion:
         """Snapshot the current version (hold it for a whole tile launch)."""

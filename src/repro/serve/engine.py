@@ -12,15 +12,23 @@ workload has capacity, the finished table, and drain accounting. What a
                      immediately. Bit-identical to the pre-refactor
                      ServeEngine (which remains as a facade).
   StemmerWorkload    the paper's workload behind the same machinery:
-                     queued word-batch requests coalesce into one fixed
-                     [block_b, 16] tile per tick, ONE megakernel launch
-                     (ops.extract_roots_fused), roots/sources scattered
-                     back per request. The dictionary is acquired from a
-                     serve.dict_store.DictStore each tick, so lexicon
-                     hot swaps land between tile launches and every
-                     served word records the dict version that served it.
+                     queued word-batch requests coalesce into fixed
+                     [data_devices * block_b, 16] super-tiles, each ONE
+                     megakernel launch (ops.extract_roots_fused, or
+                     ops.extract_roots_sharded across a data mesh). A
+                     tick is a dispatch/retire pipeline pass: up to
+                     max_inflight launches stay outstanding as device
+                     arrays while the host coalesces the next tiles;
+                     results scatter back at retire, when they are
+                     ready. The dictionary is acquired from a
+                     serve.dict_store.DictStore at each *dispatch* and
+                     pinned per launch, so lexicon hot swaps land
+                     between launches — never inside one — and every
+                     served word records the dict version that actually
+                     served it, even when the publish lands while its
+                     tile is in flight.
 
-Keeping the tile shape fixed means every tick replays the same jit
+Keeping the tile shape fixed means every launch replays the same jit
 trace; dictionary swaps with matching shapes also replay it (the
 DictStore pins residency in a ResolvedRootDict handle at publish time).
 """
@@ -276,7 +284,10 @@ class StemRequest:
     dict_versions[i] is the DictStore version whose tile launch served
     word i — across a mid-stream publish() a single request may span two
     versions, and the per-word record keeps served roots auditable
-    against exactly the lexicon that produced them.
+    against exactly the lexicon that produced them. ``dispatched`` runs
+    ahead of ``served`` while tiles are in flight: a word counts as
+    dispatched when its super-tile launches and as served only when the
+    launch retires (its results scattered back to this request).
     """
 
     rid: int
@@ -284,7 +295,8 @@ class StemRequest:
     roots: np.ndarray          # int32 [n, 4] zero-padded char codes
     sources: np.ndarray        # int32 [n] pyref.SRC_* tags
     dict_versions: np.ndarray  # int32 [n] DictStore version per word
-    served: int = 0            # words completed so far
+    dispatched: int = 0        # words launched (possibly still in flight)
+    served: int = 0            # words completed (results scattered back)
     done: bool = False
 
     @property
@@ -298,35 +310,93 @@ class StemRequest:
         return int(self.dict_versions[-1]) if self.dict_versions.size else None
 
 
+@dataclass
+class InflightTile:
+    """One dispatched super-tile awaiting retire.
+
+    The results stay device arrays until retire; ``version`` pins the
+    DictStore version acquired at *dispatch* time, so a publish() landing
+    while this tile is in flight never relabels (or re-serves) its words.
+    """
+
+    segments: list             # [(req, req_start, tile_start, count)]
+    version: int               # DictStore version pinned at dispatch
+    roots_dev: object          # device int32 [super_b, 4]
+    sources_dev: object        # device int32 [super_b]
+    slot: int                  # staging-buffer ring slot held until retire
+
+    def is_ready(self) -> bool:
+        """True once the device arrays can be fetched without blocking."""
+        try:
+            return bool(self.roots_dev.is_ready()
+                        and self.sources_dev.is_ready())
+        except AttributeError:   # backend without readiness introspection
+            return True
+
+
 class StemmerWorkload:
-    """Continuous batching of word-batch requests into megakernel tiles.
+    """Continuous batching of word-batch requests into megakernel tiles,
+    dispatch/retire-pipelined so host coalescing overlaps device compute.
 
-    Every tick coalesces pending words from in-flight requests (FIFO, in
-    admission order) into ONE fixed [block_b, 16] tile, launches
-    ops.extract_roots_fused once, and scatters roots/sources back to the
-    per-request result arrays. Short final segments are zero-padded
-    (empty words are valid kernel inputs and cost nothing extra — the
-    tile shape never changes, so every tick replays the same jit trace).
+    A tick is one scheduling pass over a ring of in-flight launches:
 
-    The dictionary comes from a DictStore: acquired once per tick, so a
-    publish() between ticks is picked up by the next tile launch without
-    restarting the engine, and requests record the version(s) that
-    served them.
+      retire    scatter back every launch whose device arrays are ready
+                (non-blocking readiness check; results land in the
+                per-request arrays, words move from dispatched to served)
+      dispatch  coalesce pending words FIFO into fixed
+                [data_devices * block_b, 16] super-tiles and launch —
+                repeatedly, until ``max_inflight`` launches are
+                outstanding or no undispatched words remain
+      drain     only a tick that would otherwise make NO progress
+                blocks: saturated (every slot outstanding, none ready)
+                waits for the oldest launch; draining (nothing left to
+                dispatch either) hard-syncs the whole ring. A tick that
+                retired or launched something never blocks, so a
+                trickle-fed server keeps its launches in flight across
+                submit/step iterations
+
+    With ``max_inflight=1`` the pipeline degenerates to the synchronous
+    dispatch-then-retire tick (overlap off). Tile inputs are built in a
+    preallocated host staging buffer per ring slot (no per-tick
+    allocation); each launch pins the DictStore version it acquired at
+    dispatch, so hot swaps landing between dispatch and retire stay
+    exact per word. ``data_devices > 1`` routes launches through
+    ``ops.extract_roots_sharded`` (dist.shard_batch), splitting each
+    super-tile across a ("data",) mesh.
     """
 
     def __init__(self, store, *, block_b: int = 256, infix: bool = True,
                  match: str = "bsearch", dict_block_r: int = 8,
-                 max_inflight: int | None = None,
+                 max_inflight: int = 2, data_devices: int = 1,
+                 max_requests: int | None = None,
                  interpret: bool | None = None):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        if data_devices < 1:
+            raise ValueError(f"data_devices must be >= 1, got {data_devices}")
         self.store = store
         self.block_b = block_b
         self.infix = infix
         self.match = match
         self.dict_block_r = dict_block_r
         self.max_inflight = max_inflight
+        self.data_devices = data_devices
+        self.max_requests = max_requests
         self.interpret = interpret
+        self.super_b = block_b * data_devices
         self.inflight: list[StemRequest] = []
-        self.ticks_launched = 0
+        self.ring: list[InflightTile] = []
+        self.ticks_launched = 0   # megakernel launches (not engine ticks)
+        self._mesh = None
+        if data_devices > 1:
+            from repro.launch import mesh as mesh_mod
+
+            self._mesh = mesh_mod.make_data_mesh(data_devices)
+        # one reusable host staging buffer per ring slot: dispatch fills
+        # segments + zeroes the tail instead of allocating per tick
+        self._staging = [np.zeros((self.super_b, ab.MAXLEN), np.int32)
+                         for _ in range(max_inflight)]
+        self._free_slots = list(range(max_inflight))
 
     # -- workload protocol -------------------------------------------------
     def make_request(self, rid: int, words, **opts) -> StemRequest:
@@ -347,8 +417,8 @@ class StemmerWorkload:
                            dict_versions=np.zeros(n, np.int32))
 
     def has_capacity(self) -> bool:
-        return (self.max_inflight is None
-                or len(self.inflight) < self.max_inflight)
+        return (self.max_requests is None
+                or len(self.inflight) < self.max_requests)
 
     def admit(self, req: StemRequest):
         self.inflight.append(req)
@@ -361,9 +431,23 @@ class StemmerWorkload:
         return [r.rid for r in self.inflight]
 
     def tick(self) -> list[StemRequest]:
-        segments = self._coalesce()
-        if segments:
-            self._launch(segments)
+        retired = self._retire_ready()
+        dispatched = self._fill_ring()
+        if not retired and not dispatched and self.ring:
+            # a would-be-zero-progress tick must still make progress.
+            # Ticks that retired or launched something never block here,
+            # so a trickle-fed server (submit/step one request at a
+            # time) keeps its launches in flight and its overlap.
+            if self._has_undispatched():
+                # saturated: every slot outstanding, none ready — wait
+                # for the oldest, then refill its slot
+                self._retire(self.ring.pop(0))
+                self._fill_ring()
+            else:
+                # draining: nothing left to launch, so overlap buys
+                # nothing — hard-sync the whole ring
+                while self.ring:
+                    self._retire(self.ring.pop(0))
         finished, still = [], []
         for req in self.inflight:
             if req.served >= req.n_words:   # includes empty requests
@@ -374,37 +458,97 @@ class StemmerWorkload:
         self.inflight = still
         return finished
 
-    # -- tile machinery ----------------------------------------------------
+    # -- dispatch side -----------------------------------------------------
+    def _has_undispatched(self) -> bool:
+        return any(req.n_words > req.dispatched for req in self.inflight)
+
     def _coalesce(self) -> list[tuple[StemRequest, int, int, int]]:
-        """FIFO-fill one tile: -> [(req, req_start, tile_start, count)]."""
+        """FIFO-fill one super-tile with *undispatched* words:
+        -> [(req, req_start, tile_start, count)]."""
         segments, fill = [], 0
         for req in self.inflight:
-            if fill >= self.block_b:
+            if fill >= self.super_b:
                 break
-            take = min(req.n_words - req.served, self.block_b - fill)
+            take = min(req.n_words - req.dispatched, self.super_b - fill)
             if take > 0:
-                segments.append((req, req.served, fill, take))
+                segments.append((req, req.dispatched, fill, take))
                 fill += take
         return segments
 
-    def _launch(self, segments):
+    def _fill_ring(self) -> int:
+        """Dispatch until max_inflight launches are outstanding or no
+        undispatched words remain; returns the number of launches."""
+        n = 0
+        while len(self.ring) < self.max_inflight:
+            segments = self._coalesce()
+            if not segments:
+                break
+            self._dispatch(segments)
+            n += 1
+        return n
+
+    def _dispatch(self, segments):
         from repro.kernels import ops  # lazy: keep engine import light
 
-        dv = self.store.acquire()       # one version per tile launch
-        tile = np.zeros((self.block_b, ab.MAXLEN), np.int32)
+        dv = self.store.acquire()       # one version per super-tile launch
+        slot = self._free_slots.pop()
+        tile = self._staging[slot]
+        fill = 0
         for req, r0, t0, take in segments:
             tile[t0:t0 + take] = req.words[r0:r0 + take]
-        roots, sources = ops.extract_roots_fused(
-            jnp.asarray(tile), dv.handle, infix=self.infix, match=self.match,
-            block_b=self.block_b, dict_block_r=self.dict_block_r,
-            interpret=self.interpret)
-        roots, sources = np.asarray(roots), np.asarray(sources)
-        for req, r0, t0, take in segments:
+            fill = t0 + take
+        tile[fill:] = 0                 # padded words must stay empty
+        try:
+            if self._mesh is not None:
+                roots, sources = ops.extract_roots_sharded(
+                    jnp.asarray(tile), dv.handle, self._mesh,
+                    infix=self.infix, match=self.match, block_b=self.block_b,
+                    dict_block_r=self.dict_block_r, interpret=self.interpret)
+            else:
+                roots, sources = ops.extract_roots_fused(
+                    jnp.asarray(tile), dv.handle, infix=self.infix,
+                    match=self.match, block_b=self.block_b,
+                    dict_block_r=self.dict_block_r, interpret=self.interpret)
+        except BaseException:
+            # a failed launch must not wedge the engine: return the slot
+            # and leave every word undispatched so a later tick retries
+            self._free_slots.append(slot)
+            raise
+        for req, _r0, _t0, take in segments:
+            req.dispatched += take      # only a successful launch counts
+        entry = InflightTile(segments, dv.version, roots, sources, slot)
+        try:                            # start D2H early; retire just reads
+            roots.copy_to_host_async()
+            sources.copy_to_host_async()
+        except AttributeError:
+            pass
+        self.ring.append(entry)
+        self.ticks_launched += 1
+
+    # -- retire side -------------------------------------------------------
+    def _retire_ready(self) -> int:
+        """Retire every in-flight launch whose results are ready, oldest
+        first, without blocking; returns the number retired."""
+        still, n = [], 0
+        for entry in self.ring:
+            if entry.is_ready():
+                self._retire(entry)
+                n += 1
+            else:
+                still.append(entry)
+        self.ring = still
+        return n
+
+    def _retire(self, entry: InflightTile):
+        """Scatter one launch's results back (blocks if not yet ready)."""
+        roots = np.asarray(entry.roots_dev)
+        sources = np.asarray(entry.sources_dev)
+        for req, r0, t0, take in entry.segments:
             req.roots[r0:r0 + take] = roots[t0:t0 + take]
             req.sources[r0:r0 + take] = sources[t0:t0 + take]
-            req.dict_versions[r0:r0 + take] = dv.version
+            req.dict_versions[r0:r0 + take] = entry.version
             req.served += take
-        self.ticks_launched += 1
+        self._free_slots.append(entry.slot)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,11 @@
 """Serving-core tests: the workload-agnostic Engine, StemmerWorkload
-tile coalescing + bit-exact parity (including across a dictionary hot
-swap), DictStore versioning, resolved-dict re-trace avoidance, and the
-drain report / undrained-work surfacing."""
+tile coalescing + bit-exact parity across dispatch ring depths
+(including across a dictionary hot swap, and one landing while tiles
+are in flight), the dispatch/retire pipeline's tick accounting,
+DictStore versioning + sorted-merge delta publishes, resolved-dict
+re-trace avoidance, and the drain report / undrained-work surfacing.
+Multi-device (sharded super-tile) coverage lives in
+test_serve_sharded.py under forced host devices."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -21,10 +25,11 @@ def dict_and_words():
 
 
 def _serve(store, enc, sizes, *, block_b=32, steps_before_swap=None,
-           swap_to=None, max_inflight=None):
+           swap_to=None, max_inflight=2, max_requests=None):
     """Submit word batches of the given sizes, optionally hot-swap, drain."""
     eng = Engine(StemmerWorkload(store, block_b=block_b,
-                                 max_inflight=max_inflight))
+                                 max_inflight=max_inflight,
+                                 max_requests=max_requests))
     off, rids = 0, []
     for n in sizes:
         rids.append(eng.submit(enc[off:off + n]))
@@ -41,11 +46,15 @@ def _serve(store, enc, sizes, *, block_b=32, steps_before_swap=None,
 # ---------------------------------------------------------------------------
 # StemmerWorkload parity + coalescing
 # ---------------------------------------------------------------------------
-def test_serve_parity_bit_identical(dict_and_words):
+@pytest.mark.parametrize("max_inflight", [1, 2, 4])
+def test_serve_parity_bit_identical(dict_and_words, max_inflight):
+    """Bit-exact at every dispatch ring depth: 1 (synchronous tick,
+    overlap off) through deep overlapped rings."""
     arrays, enc = dict_and_words
     store = DictStore(arrays)
     sizes = (37, 64, 5, 50)  # deliberately not block_b-aligned
-    eng, rids, rep = _serve(store, enc, sizes, block_b=32)
+    eng, rids, rep = _serve(store, enc, sizes, block_b=32,
+                            max_inflight=max_inflight)
 
     want_r, want_s = stemmer.stem_batch(jnp.asarray(enc[:sum(sizes)]), arrays)
     want_r, want_s = np.asarray(want_r), np.asarray(want_s)
@@ -103,6 +112,127 @@ def test_stemmer_workload_satisfies_protocol(dict_and_words):
 
 
 # ---------------------------------------------------------------------------
+# dispatch/retire ring (overlapped serving)
+# ---------------------------------------------------------------------------
+def test_tick_dispatches_until_ring_full(dict_and_words):
+    """One engine tick must keep launching tiles until max_inflight
+    launches are outstanding — not one tile per tick (the pre-async
+    coalescing bug)."""
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    eng = Engine(StemmerWorkload(store, block_b=16, max_inflight=4))
+    for i in range(10):
+        eng.submit(enc[i * 16:(i + 1) * 16])   # 10 tiles pending
+    eng.step()
+    w = eng.workload
+    assert w.ticks_launched == 4               # ring filled in ONE tick
+    assert len(w.ring) + len(w._free_slots) == 4
+
+
+def test_ticks_to_drain_shrink_with_ring_depth(dict_and_words):
+    """Deeper rings drain the same workload in fewer engine ticks, with
+    the launch count invariant (regression for the one-tile-per-tick
+    coalescing)."""
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    ticks, launches = {}, {}
+    for depth in (1, 4):
+        eng = Engine(StemmerWorkload(store, block_b=16, max_inflight=depth))
+        for i in range(10):                    # 160 words -> 10 tiles
+            eng.submit(enc[i * 16:(i + 1) * 16])
+        rep = eng.run_until_drained()
+        assert rep.drained
+        ticks[depth] = rep.ticks
+        launches[depth] = eng.workload.ticks_launched
+    assert launches[1] == launches[4] == 10
+    assert ticks[4] < ticks[1]
+
+
+def test_staging_buffers_reused_across_ticks(dict_and_words):
+    """Dispatch fills a preallocated per-slot staging buffer; no per-tick
+    tile allocation."""
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    w = StemmerWorkload(store, block_b=16, max_inflight=2)
+    eng = Engine(w)
+    buffers = {id(b) for b in w._staging}
+    assert len(buffers) == 2
+    for i in range(8):
+        eng.submit(enc[i * 16:(i + 1) * 16])
+    eng.run_until_drained()
+    assert {id(b) for b in w._staging} == buffers  # same arrays throughout
+    assert w._free_slots and len(w._free_slots) == 2  # all slots returned
+
+
+def test_trickle_feed_keeps_launches_in_flight(dict_and_words):
+    """A tick that dispatched (or retired) something never hard-syncs
+    the ring: a server alternating submit()/step() keeps overlap even
+    though the queue empties between requests."""
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    eng = Engine(StemmerWorkload(store, block_b=16, max_inflight=2))
+    w = eng.workload
+    for i in range(3):                  # one tile per request, trickled
+        eng.submit(enc[i * 16:(i + 1) * 16])
+        eng.step()
+        # the just-dispatched launch stays in flight — no drain sync
+        assert w.ring, f"step {i}: ring drained despite fresh dispatch"
+    rep = eng.run_until_drained()
+    assert rep.drained and w.ticks_launched == 3
+    want_r, _ = stemmer.stem_batch(jnp.asarray(enc[:48]), arrays)
+    got_r = np.concatenate([eng.result(r).roots for r in range(3)])
+    np.testing.assert_array_equal(got_r, np.asarray(want_r))
+
+
+def test_failed_launch_leaves_engine_recoverable(dict_and_words,
+                                                 monkeypatch):
+    """A kernel launch that raises must not wedge the engine: the
+    staging slot returns to the ring and the words stay undispatched,
+    so the next tick retries and the engine still drains."""
+    from repro.kernels import ops
+
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    eng = Engine(StemmerWorkload(store, block_b=16, max_inflight=2))
+    rids = [eng.submit(enc[i * 16:(i + 1) * 16]) for i in range(3)]
+
+    real = ops.extract_roots_fused
+    boom = {"armed": True}
+
+    def flaky(*a, **kw):
+        if boom.pop("armed", False):
+            raise RuntimeError("transient device failure")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "extract_roots_fused", flaky)
+    with pytest.raises(RuntimeError, match="transient"):
+        eng.step()
+    w = eng.workload
+    assert len(w._free_slots) == 2          # slot returned
+    assert all(r.dispatched == 0 for r in w.inflight)  # nothing stranded
+    rep = eng.run_until_drained()           # retry succeeds
+    assert rep.drained
+    want_r, _ = stemmer.stem_batch(jnp.asarray(enc[:48]), arrays)
+    got_r = np.concatenate([eng.result(r).roots for r in rids])
+    np.testing.assert_array_equal(got_r, np.asarray(want_r))
+
+
+def test_overlap_parity_with_sync(dict_and_words):
+    """Depth-4 overlapped serving returns exactly what the synchronous
+    tick returns, request by request."""
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    sizes = (37, 64, 5, 50, 20)
+    sync_eng, sync_rids, _ = _serve(store, enc, sizes, max_inflight=1)
+    over_eng, over_rids, _ = _serve(store, enc, sizes, max_inflight=4)
+    for rs, ro in zip(sync_rids, over_rids):
+        a, b = sync_eng.result(rs), over_eng.result(ro)
+        np.testing.assert_array_equal(a.roots, b.roots)
+        np.testing.assert_array_equal(a.sources, b.sources)
+        np.testing.assert_array_equal(a.dict_versions, b.dict_versions)
+
+
+# ---------------------------------------------------------------------------
 # dictionary hot swap
 # ---------------------------------------------------------------------------
 def test_hot_swap_mid_stream_bit_identical(dict_and_words):
@@ -155,6 +285,39 @@ def test_same_shape_swap_replays_jit_trace(dict_and_words):
                                   np.asarray(want_r))
 
 
+def test_swap_while_tile_in_flight_pins_dispatch_version(dict_and_words):
+    """A publish() landing between a tile's dispatch and its retire must
+    not relabel (or re-serve) that tile: every word records the version
+    acquired at dispatch, exactly."""
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    grown = corpus.grow_root_arrays(arrays, 2048, seed=9)
+    eng = Engine(StemmerWorkload(store, block_b=16, max_inflight=4))
+    rids = [eng.submit(enc[i * 16:(i + 1) * 16]) for i in range(8)]
+    eng.step()                      # fills the ring: 4 tiles in flight
+    w = eng.workload
+    assert w.ticks_launched == 4 and len(w.ring) + len(w._free_slots) == 4
+    in_flight_words = sum(r.dispatched for r in w.inflight)
+    served_words = sum(r.served for r in w.inflight)
+    assert in_flight_words == 64    # dispatched under v0 ...
+    assert served_words < 64        # ... not yet all retired
+    v1 = store.publish(grown)
+    rep = eng.run_until_drained()
+    assert rep.drained and v1 == 1
+
+    versions = np.concatenate([eng.result(r).dict_versions for r in rids])
+    # tiles in flight at publish time keep the version they dispatched
+    # under; only post-swap dispatches see v1
+    np.testing.assert_array_equal(versions[:64], 0)
+    np.testing.assert_array_equal(versions[64:], 1)
+    # and each half is bit-identical to stem_batch under its own version
+    got_r = np.concatenate([eng.result(r).roots for r in rids])
+    for v, sl in ((0, slice(0, 64)), (1, slice(64, 128))):
+        want_r, _ = stemmer.stem_batch(jnp.asarray(enc[sl]),
+                                       store.get(v).arrays)
+        np.testing.assert_array_equal(got_r[sl], np.asarray(want_r))
+
+
 # ---------------------------------------------------------------------------
 # DictStore
 # ---------------------------------------------------------------------------
@@ -185,6 +348,66 @@ def test_dict_store_versioning(dict_and_words):
     no_hist.publish(grown)
     with pytest.raises(KeyError):
         no_hist.get(0)
+
+
+def test_publish_delta_sorted_merge(dict_and_words):
+    """publish_delta merges insert/remove key lists against the current
+    version: equivalent to a from-scratch publish of the merged table,
+    with untouched tables sharing the current version's device arrays."""
+    arrays, enc = dict_and_words
+    store = DictStore(arrays)
+    tri0 = np.asarray(arrays.tri)
+    removed = tri0[[0, 3, 11]].tolist()
+    inserted = [int(tri0.max() + d) for d in (2, 7, 5)]
+    v1 = store.publish_delta(insert={"tri": inserted + [int(tri0[1])]},
+                             remove={"tri": removed})
+    assert v1 == 1
+    a1 = store.get(1).arrays
+    want_tri = np.union1d(np.setdiff1d(tri0, removed),
+                          np.asarray(inserted, np.int32))
+    np.testing.assert_array_equal(np.asarray(a1.tri), want_tri)
+    # untouched tables are the same device buffers, not re-uploads
+    assert a1.quad is arrays.quad and a1.bi is arrays.bi
+
+    # served output equals a from-scratch publish of the merged arrays
+    scratch = stemmer.RootDictArrays(tri=jnp.asarray(want_tri),
+                                     quad=arrays.quad, bi=arrays.bi)
+    want_r, want_s = stemmer.stem_batch(jnp.asarray(enc[:64]), scratch)
+    eng, rids, _ = _serve(store, enc, (64,))
+    np.testing.assert_array_equal(eng.result(rids[0]).roots,
+                                  np.asarray(want_r))
+    np.testing.assert_array_equal(eng.result(rids[0]).sources,
+                                  np.asarray(want_s))
+    assert eng.result(rids[0]).dict_version == 1
+
+
+def test_publish_delta_validates(dict_and_words):
+    arrays, _ = dict_and_words
+    store = DictStore(arrays)
+    with pytest.raises(ValueError, match="absent"):
+        store.publish_delta(remove={"tri": [1 << 23]})
+    with pytest.raises(ValueError, match="both"):
+        store.publish_delta(insert={"tri": [7]}, remove={"tri": [7]})
+    with pytest.raises(ValueError, match="unknown dictionary tables"):
+        store.publish_delta(insert={"pent": [7]})
+    assert store.version == 0       # failed deltas publish nothing
+
+    # raw root strings encode + pack through the alphabet
+    from repro.core import alphabet as ab
+    root = "كتب"
+    key = ab.pack_key(ab.encode_word(root))
+    v_str = store.publish_delta(insert={"tri": [root]})
+    assert key in np.asarray(store.get(v_str).arrays.tri)
+
+    # removing every bi key leaves the empty-table sentinel, and the
+    # table can be refilled later
+    bi0 = np.asarray(arrays.bi)
+    bi0 = bi0[bi0 >= 0]
+    v = store.publish_delta(remove={"bi": bi0.tolist()})
+    np.testing.assert_array_equal(np.asarray(store.get(v).arrays.bi), [-1])
+    v2 = store.publish_delta(insert={"bi": bi0[:3].tolist()})
+    np.testing.assert_array_equal(np.asarray(store.get(v2).arrays.bi),
+                                  np.sort(bi0[:3]))
 
 
 # ---------------------------------------------------------------------------
