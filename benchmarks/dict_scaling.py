@@ -14,6 +14,11 @@ The recorded rows expose the resident/streamed crossover; the `sorted`
 core-jnp backend rides along as the non-kernel reference. Dictionary
 growth is synthetic (corpus.grow_root_arrays) but keeps the real root
 keys, so real matches still occur at every size.
+
+A second section, ``dict_stream_pipeline`` (:func:`run_pipeline`),
+sweeps the explicitly pipelined streamed path: DMA ladder depth
+(``num_buffers``) x tile-visit skip index on/off, recording the visit
+counts next to the timings so the skip coverage is tracked per size.
 """
 from __future__ import annotations
 
@@ -53,16 +58,78 @@ def run(sizes=(2048, 8192, 32768, 131072, 262144), n_words: int = 2048,
     return rows
 
 
-def _row(n, total, n_words, variant, dt, **extra):
+def _row(n, total, n_words, variant, dt, *, section="dict_scaling",
+         variant_key="residency", **extra):
     return {
-        "name": f"dict_scaling_n{n}_{variant}",
+        "name": f"{section}_n{n}_{variant}",
         "n_keys": total,
         "n_words": n_words,
-        "residency": variant,
+        variant_key: variant,
         "us_per_call": 1e6 * dt,
         "wps": n_words / dt,
         **extra,
     }
+
+
+def run_pipeline(sizes=(2048, 32768, 131072, 262144), n_words: int = 2048,
+                 block_b: int = 128, dict_block_r: int = 8,
+                 match: str = "bsearch", num_bufferss=(1, 2, 4),
+                 iters: int = 2):
+    """The explicitly pipelined streamed sweep: num_buffers (DMA ladder
+    depth) x skip-index on/off over dictionary sizes, with the tile-visit
+    counts recorded next to the timings.
+
+    Every streamed row records ``visited_tiles`` (what the scalar-
+    prefetched visit index actually sweeps, summed over batch tiles) and
+    ``full_sweep_tiles`` (batch_tiles x dictionary tiles — what
+    skip_index=False visits); at 128K+ keys CI asserts the skip index
+    visits strictly fewer. A resident row rides along at sizes under the
+    VMEM budget as the sanity reference the CI 2x-regression guard
+    compares the best streamed row against (interpret-mode sanity on
+    CPU, not a perf claim — the real ladder-depth sweep needs a TPU
+    host, see ROADMAP).
+    """
+    d = corpus.build_dictionary(n_tri=1000, n_quad=120, seed=0)
+    base = stemmer.RootDictArrays.from_rootdict(d)
+    words, _, _ = corpus.build_corpus(n_words=n_words, seed=1)
+    enc = jnp.asarray(corpus.encode_corpus(words))
+
+    rows = []
+    for n in sizes:
+        da = corpus.grow_root_arrays(base, n, seed=n)
+        total = sum(int(x.shape[0]) for x in (da.tri, da.quad, da.bi))
+        if total <= sf.MAX_RESIDENT_KEYS:
+            dt, _ = _bench(ops.extract_roots_fused, enc, da, match=match,
+                           block_b=block_b, residency="resident",
+                           interpret=True, warmup=1, iters=iters)
+            rows.append(_prow(n, total, n_words, "resident", dt,
+                              block_b=block_b, match=match))
+        for skip in (False, True):
+            stats = sf.tile_visit_stats(enc, da, block_b=block_b,
+                                        dict_block_r=dict_block_r,
+                                        skip_index=skip)
+            for nb in num_bufferss:
+                dt, _ = _bench(ops.extract_roots_fused, enc, da,
+                               match=match, block_b=block_b,
+                               residency="streamed",
+                               dict_block_r=dict_block_r, num_buffers=nb,
+                               skip_index=skip, interpret=True,
+                               warmup=1, iters=iters)
+                variant = f"skip{'on' if skip else 'off'}_b{nb}"
+                rows.append(_prow(
+                    n, total, n_words, variant, dt, block_b=block_b,
+                    match=match, dict_block_r=dict_block_r, num_buffers=nb,
+                    skip_index=skip, visited_tiles=stats["visited"],
+                    full_sweep_tiles=stats["full_sweep"],
+                    batch_tiles=stats["batch_tiles"],
+                    dict_tiles=stats["dict_tiles"]))
+    return rows
+
+
+def _prow(n, total, n_words, variant, dt, **extra):
+    return _row(n, total, n_words, variant, dt,
+                section="dict_stream_pipeline", variant_key="variant",
+                **extra)
 
 
 def main(**kw):
@@ -73,5 +140,16 @@ def main(**kw):
     return rows
 
 
+def main_pipeline(**kw):
+    rows = run_pipeline(**kw)
+    for r in rows:
+        visits = (f"_{r['visited_tiles']}of{r['full_sweep_tiles']}tiles"
+                  if "visited_tiles" in r else "")
+        print(f"{r['name']},{r['us_per_call']:.3f},"
+              f"{r['wps']:.1f}Wps_{r['n_keys']}keys{visits}")
+    return rows
+
+
 if __name__ == "__main__":
     main()
+    main_pipeline()

@@ -6,6 +6,9 @@ Prints ``name,us_per_call,derived`` CSV lines:
   scaling_*      Fig 17  (throughput vs word count)
   dict_scaling_* §5.3    (resident vs streamed megakernel over
                           dictionary sizes 2K -> 256K keys)
+  dict_stream_pipeline_* §5.3 (pipelined streamed sweep: DMA ladder
+                          depth x tile-visit skip index, visit counts
+                          recorded per row)
   serve_throughput_*     (serve-path words/sec through
                           Engine + StemmerWorkload, queue depth x block_b)
   table6_*       Table 6 (accuracy ± infix processing)
@@ -43,6 +46,11 @@ SMOKE_PARAMS = {
     # 131072 keys > MAX_RESIDENT_KEYS: the smoke run always exercises one
     # streamed-dictionary configuration (CI fails if the section is absent)
     "dict_scaling": dict(sizes=(2048, 131072), n_words=512),
+    # the pipelined sweep must keep skip-on AND skip-off rows at >= 128K
+    # keys (CI asserts the skip index visits strictly fewer tiles) plus
+    # the resident sanity row the 2x-regression guard compares against
+    "dict_stream_pipeline": dict(sizes=(2048, 131072), n_words=256,
+                                 num_bufferss=(1, 2), iters=1),
     # both overlap=off (inflight 1) and overlap=on rows must exist in the
     # smoke record (CI fails if either goes missing), plus the swap rows
     "serve_throughput": dict(queue_depths=(2, 4), block_bs=(32,),
@@ -74,6 +82,7 @@ def main(argv=None) -> None:
         ("throughput", throughput.main),
         ("scaling", scaling.main),
         ("dict_scaling", dict_scaling.main),
+        ("dict_stream_pipeline", dict_scaling.main_pipeline),
         ("serve_throughput", serve_throughput.main),
         ("accuracy", accuracy_bench.main),
         ("compare_stage", compare_stage.main),

@@ -68,7 +68,7 @@ class RootDictArrays:
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class ResolvedRootDict:
-    """A RootDictArrays plus its *pre-resolved* megakernel residency.
+    """A RootDictArrays plus its *pre-resolved* megakernel configuration.
 
     Serving hot-swaps dictionaries between tile launches (see
     serve/dict_store.py); resolving ``residency="auto"`` once at publish
@@ -77,6 +77,13 @@ class ResolvedRootDict:
     re-tracing. The residency rides as pytree aux data: two handles with
     equal shapes and equal residency hit the same cache entry.
 
+    ``tiles`` optionally carries a prebuilt ``stem_match.DictTileSet``
+    for the streamed layout: the padded `[tri | quad | bi]` tile stream
+    plus the per-tile sorted boundary tables the tile-visit pre-pass
+    intersects candidate keys against. Publishing with a ``dict_block_r``
+    precomputes it once, so serving launches (and hot swaps) skip the
+    per-call pad/concat of the dictionary stream.
+
     Every stemmer entry point (``extract_roots``/``stem_batch``/... and
     ``ops.extract_roots_fused``) accepts a handle anywhere it accepts
     plain arrays; the handle's pinned residency wins over the call-site
@@ -84,39 +91,63 @@ class ResolvedRootDict:
     """
 
     arrays: RootDictArrays
-    residency: str  # "resident" | "streamed" — never "auto"
+    residency: str          # "resident" | "streamed" — never "auto"
+    tiles: object = None    # stem_match.DictTileSet | None (streamed layout)
 
     def tree_flatten(self):
-        return (self.arrays,), self.residency
+        return (self.arrays, self.tiles), self.residency
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], aux)
+        return cls(children[0], aux, children[1])
 
     @property
     def n_keys(self) -> int:
         return self.arrays.n_keys
 
 
-def resolve_dict(roots, *, residency: str = "auto") -> ResolvedRootDict:
-    """Pin a dictionary's residency against the VMEM budget once, up front."""
+def resolve_dict(roots, *, residency: str = "auto", infix: bool = True,
+                 dict_block_r: int | None = None) -> ResolvedRootDict:
+    """Pin a dictionary's residency against the VMEM budget once, up front.
+
+    ``infix`` scopes the budget to the tables the sweep loads (bi never
+    ships for infix=False). A streamed resolution with ``dict_block_r``
+    set also prebuilds the ``DictTileSet`` (tile stream + boundary
+    tables), so every later launch — including shape-matched hot swaps —
+    reuses it instead of re-padding the tables per call.
+    """
     if isinstance(roots, ResolvedRootDict):
         unwrap_dict(roots, residency)  # conflicting residency raises
-        return roots
-    from repro.kernels import stem_fused as sf  # lazy: kernels depend on core
+        res, arrays = roots.residency, roots.arrays
+    else:
+        from repro.kernels import stem_fused as sf  # lazy: kernels need core
 
-    return ResolvedRootDict(roots, sf.choose_residency(roots, residency))
+        res = sf.choose_residency(roots, residency, infix=infix)
+        arrays = roots
+    tiles = roots.tiles if isinstance(roots, ResolvedRootDict) else None
+    if res == "streamed" and dict_block_r and (
+            tiles is None or tiles.dict_block_r != dict_block_r):
+        # an already-resolved handle without (matching) tiles still gets
+        # them built here — publish-time prebuild must not silently skip
+        from repro.kernels import stem_match as smm
+
+        tiles = smm.build_dict_tiles(arrays.tri, arrays.quad, arrays.bi,
+                                     dict_block_r)
+    if isinstance(roots, ResolvedRootDict) and tiles is roots.tiles:
+        return roots
+    return ResolvedRootDict(arrays, res, tiles)
 
 
 def unwrap_dict(roots, residency: str = "auto"):
-    """-> (RootDictArrays, residency); a handle's pinned residency wins."""
+    """-> (RootDictArrays, residency, tiles); a handle's pinned residency
+    wins, tiles is the handle's prebuilt DictTileSet (None otherwise)."""
     if isinstance(roots, ResolvedRootDict):
         if residency not in ("auto", roots.residency):
             raise ValueError(
                 f"residency={residency!r} conflicts with the resolved dict"
                 f" handle's pinned residency {roots.residency!r}")
-        return roots.arrays, roots.residency
-    return roots, residency
+        return roots.arrays, roots.residency, roots.tiles
+    return roots, residency, None
 
 
 # ---------------------------------------------------------------------------
@@ -218,7 +249,8 @@ def _match(keys, dict_keys, backend: str):
 # Full extraction
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("infix", "backend", "extended",
-                                             "residency"))
+                                             "residency", "num_buffers",
+                                             "skip_index"))
 def extract_roots(
     words: jnp.ndarray,
     roots: RootDictArrays,
@@ -227,6 +259,8 @@ def extract_roots(
     backend: str = "sorted",
     extended: bool = False,
     residency: str = "auto",
+    num_buffers: int = 2,
+    skip_index: bool = True,
 ):
     """words int32[B,16] -> (root int32[B,4], source int32[B]).
 
@@ -240,19 +274,26 @@ def extract_roots(
     single-launch stage 1-5 megakernel (kernels/stem_fused.py;
     paper-exact, no intermediate HBM tensors). For the fused backend,
     residency picks the dictionary layout: "resident" (VMEM-held),
-    "streamed" (tiles over a minor grid axis — unbounded dictionary
-    size), or "auto" (default: resident while it fits). The extended rule
-    pool is not in the megakernel's candidate grid, so extended=True
-    keeps the staged path and uses the megakernel's in-kernel sorted
-    search for stage 5 only.
+    "streamed" (a scalar-prefetched tile-visit sweep fed by an explicit
+    DMA ladder — unbounded dictionary size), or "auto" (default:
+    resident while it fits); ``num_buffers`` (DMA ladder depth) and
+    ``skip_index`` (visit only tiles that can hit) tune the streamed
+    sweep and are ignored elsewhere. The extended rule pool is not in
+    the megakernel's candidate grid, so extended=True keeps the staged
+    path and uses the megakernel's in-kernel sorted search for stage 5
+    only.
     """
-    roots, residency = unwrap_dict(roots, residency)
     if backend == "fused" and not extended:
         from repro.kernels import ops  # lazy: kernels depend on core
 
+        # pass roots through unchanged: a ResolvedRootDict handle keeps
+        # its pinned residency and prebuilt tile stream
         return ops.extract_roots_fused(words, roots, infix=infix,
-                                       residency=residency)
+                                       residency=residency,
+                                       num_buffers=num_buffers,
+                                       skip_index=skip_index)
 
+    roots, residency, _ = unwrap_dict(roots, residency)
     tri, tri_valid, quad, quad_valid = generate_stems(words)
     infix_codes = jnp.asarray(ab.INFIX_CODES)
 
@@ -317,21 +358,25 @@ def extract_roots(
 # accepts the full (infix, backend, extended, residency) option set.
 # ---------------------------------------------------------------------------
 def stem_batch(words, roots, *, infix=True, backend="sorted", extended=False,
-               residency="auto"):
+               residency="auto", num_buffers=2, skip_index=True):
     """'Non-pipelined processor' analogue: whole batch through all stages."""
     return extract_roots(words, roots, infix=infix, backend=backend,
-                         extended=extended, residency=residency)
+                         extended=extended, residency=residency,
+                         num_buffers=num_buffers, skip_index=skip_index)
 
 
 @functools.partial(jax.jit, static_argnames=("infix", "backend", "extended",
-                                             "residency"))
+                                             "residency", "num_buffers",
+                                             "skip_index"))
 def stem_sequential(words, roots, *, infix=True, backend="sorted",
-                    extended=False, residency="auto"):
+                    extended=False, residency="auto", num_buffers=2,
+                    skip_index=True):
     """'Software implementation' analogue: one word at a time (lax.scan)."""
 
     def step(carry, w):
         r, s = extract_roots(w[None], roots, infix=infix, backend=backend,
-                             extended=extended, residency=residency)
+                             extended=extended, residency=residency,
+                             num_buffers=num_buffers, skip_index=skip_index)
         return carry, (r[0], s[0])
 
     _, (root, source) = jax.lax.scan(step, 0, words)
@@ -339,7 +384,8 @@ def stem_sequential(words, roots, *, infix=True, backend="sorted",
 
 
 def stem_pipelined(words, roots, *, infix=True, backend="sorted",
-                   extended=False, residency="auto", microbatch=256):
+                   extended=False, residency="auto", num_buffers=2,
+                   skip_index=True, microbatch=256):
     """'Pipelined processor' analogue on one host: microbatched streaming.
 
     On real hardware the per-microbatch stages overlap via async dispatch;
@@ -351,7 +397,8 @@ def stem_pipelined(words, roots, *, infix=True, backend="sorted",
     wp = jnp.pad(words, ((0, pad), (0, 0)))
     chunks = wp.reshape(-1, microbatch, words.shape[1])
     outs = [stem_batch(c, roots, infix=infix, backend=backend,
-                       extended=extended, residency=residency)
+                       extended=extended, residency=residency,
+                       num_buffers=num_buffers, skip_index=skip_index)
             for c in chunks]
     root = jnp.concatenate([o[0] for o in outs])[:b]
     source = jnp.concatenate([o[1] for o in outs])[:b]

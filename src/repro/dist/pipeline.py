@@ -99,12 +99,12 @@ def _slot_mask(groups) -> np.ndarray:
 
 def _streamed_match_sorted(keys, dict_keys, chunk_keys: int):
     """OR-accumulating chunked sorted match: the jnp analogue of the
-    megakernel's streamed Compare path (stem_fused._fused_streamed_kernel).
+    megakernel's streamed Compare path (stem_fused._fused_pipeline_kernel).
 
     The sorted dictionary is swept in ``chunk_keys``-sized sentinel-padded
     tiles (each tile stays sorted, so per-tile searchsorted is exact) while
     the candidate keys stay live — on a device this bounds the Compare
-    stage's working set the same way the kernel's minor grid axis does.
+    stage's working set the same way the kernel's tile-visit sweep does.
     """
     from repro.kernels import stem_match as sm  # sentinel constant only
 

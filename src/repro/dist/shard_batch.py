@@ -43,9 +43,10 @@ def mesh_axis_size(mesh, axis: str) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=("mesh", "axis", "infix", "match", "block_b",
-                     "residency", "dict_block_r", "interpret"))
+                     "residency", "dict_block_r", "num_buffers",
+                     "skip_index", "interpret"))
 def _shard_call(words, roots, *, mesh, axis, infix, match, block_b,
-                residency, dict_block_r, interpret):
+                residency, dict_block_r, num_buffers, skip_index, interpret):
     n_dev = mesh_axis_size(mesh, axis)
     b = words.shape[0]
     pad = (-b) % (n_dev * block_b)
@@ -55,6 +56,7 @@ def _shard_call(words, roots, *, mesh, axis, infix, match, block_b,
         return sf.stem_fused_pallas(
             w, r, infix=infix, match=match, block_b=block_b,
             residency=residency, dict_block_r=dict_block_r,
+            num_buffers=num_buffers, skip_index=skip_index,
             interpret=interpret)
 
     f = shard_map(local, mesh=mesh, in_specs=(P(axis), P()),
@@ -66,19 +68,23 @@ def _shard_call(words, roots, *, mesh, axis, infix, match, block_b,
 def shard_batch(words, roots, mesh, *, axis: str = "data",
                 infix: bool = True, match: str = "bsearch",
                 block_b: int = 256, residency: str = "auto",
-                dict_block_r: int = 8, interpret: bool = False):
+                dict_block_r: int = 8, num_buffers: int = 2,
+                skip_index: bool = True, interpret: bool = False):
     """words int32[B,16] -> (root int32[B,4], source int32[B]), B split
     over ``mesh[axis]``.
 
     Same contract as ``ops.extract_roots_fused``; ``roots`` accepts
     plain RootDictArrays or a pre-resolved ``ResolvedRootDict`` handle
-    (the serving path — its pinned residency wins, so hot swaps with
-    matching shapes replay the cached trace). B is padded up to a
-    multiple of ``n_dev * block_b`` and sliced back, so ragged final
-    super-tiles are valid.
+    (the serving path — its pinned residency wins and its prebuilt tile
+    stream replicates to every device, so hot swaps with matching shapes
+    replay the cached trace). B is padded up to a multiple of
+    ``n_dev * block_b`` and sliced back, so ragged final super-tiles are
+    valid.
     """
-    roots, residency = core_stemmer.unwrap_dict(roots, residency)
-    residency = sf.choose_residency(roots, residency)
+    arrays, residency, _ = core_stemmer.unwrap_dict(roots, residency)
+    residency = sf.choose_residency(arrays, residency, infix=infix)
+    # roots passes through unchanged so a handle keeps its tile stream
     return _shard_call(words, roots, mesh=mesh, axis=axis, infix=infix,
                        match=match, block_b=block_b, residency=residency,
-                       dict_block_r=dict_block_r, interpret=interpret)
+                       dict_block_r=dict_block_r, num_buffers=num_buffers,
+                       skip_index=skip_index, interpret=interpret)

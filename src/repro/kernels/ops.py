@@ -60,33 +60,41 @@ def unpack_keys(keys: jnp.ndarray) -> jnp.ndarray:
 def extract_roots_fused(words, roots, *, infix: bool = True,
                         match: str = "bsearch", block_b: int = 256,
                         residency: str = "auto", dict_block_r: int = 8,
+                        num_buffers: int = 2, skip_index: bool = True,
                         interpret: bool | None = None):
     """Single-launch megakernel: all five stages in ONE pallas_call
     (stem_fused.py). Same contract as repro.core.stemmer.extract_roots;
     bit-identical output.
 
     residency: "resident" keeps the packed dictionaries in VMEM across
-    the batch sweep, "streamed" iterates (dict_block_r x 128) dictionary
-    tiles over a minor grid axis (unbounded dictionary size), "auto"
-    (default) streams only past stem_fused.MAX_RESIDENT_KEYS.
+    the batch sweep, "streamed" sweeps a scalar-prefetched visit list of
+    (dict_block_r x 128) dictionary tiles through an explicit
+    ``num_buffers``-deep DMA ladder (unbounded dictionary size; with
+    ``skip_index`` only tiles a live candidate key can land in are
+    visited), "auto" (default) streams only past
+    stem_fused.MAX_RESIDENT_KEYS.
 
     roots accepts plain RootDictArrays or a pre-resolved
     core.stemmer.ResolvedRootDict handle (serving path): the handle's
-    pinned residency overrides the residency argument, so dictionary
-    hot swaps with matching shapes never re-trace.
+    pinned residency overrides the residency argument and its prebuilt
+    tile stream skips the per-call pad/concat, so dictionary hot swaps
+    with matching shapes never re-trace.
     """
     if interpret is None:
         interpret = _interpret_default()
     return sf.stem_fused_pallas(words, roots, infix=infix, match=match,
                                 block_b=block_b, residency=residency,
                                 dict_block_r=dict_block_r,
+                                num_buffers=num_buffers,
+                                skip_index=skip_index,
                                 interpret=interpret)
 
 
 def extract_roots_sharded(words, roots, mesh, *, axis: str = "data",
                           infix: bool = True, match: str = "bsearch",
                           block_b: int = 256, residency: str = "auto",
-                          dict_block_r: int = 8,
+                          dict_block_r: int = 8, num_buffers: int = 2,
+                          skip_index: bool = True,
                           interpret: bool | None = None):
     """Megakernel launch data-sharded over ``mesh[axis]``: the batch is
     split into per-device [block_b, 16] tiles (one super-tile of
@@ -101,7 +109,8 @@ def extract_roots_sharded(words, roots, mesh, *, axis: str = "data",
         interpret = _interpret_default()
     return shard_batch(words, roots, mesh, axis=axis, infix=infix,
                        match=match, block_b=block_b, residency=residency,
-                       dict_block_r=dict_block_r, interpret=interpret)
+                       dict_block_r=dict_block_r, num_buffers=num_buffers,
+                       skip_index=skip_index, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("infix", "interpret"))
@@ -141,24 +150,26 @@ def autotune_stem_fused(words, roots, *, infix: bool = True,
                         block_bs=(128, 256, 512), matches=("bank", "bsearch"),
                         residencies=("resident", "streamed"),
                         dict_block_rs=(4, 8, 16),
+                        num_bufferss=(1, 2, 4), skip_indexes=(True,),
                         iters: int = 2, interpret: bool | None = None):
-    """Time the megakernel over (block_b, match, residency, dict tile rows)
-    and return the best config.
+    """Time the megakernel over (block_b, match, residency, dict tile rows,
+    DMA ladder depth, skip index) and return the best config.
 
     Returns ``{"block_b": int, "match": str, "residency": str,
-    "dict_block_r": int, "timings": {(block_b, match, residency,
-    dict_block_r): seconds}}``. Timings include one warmup (compile) call,
+    "dict_block_r": int, "num_buffers": int, "skip_index": bool,
+    "timings": {(block_b, match, residency, dict_block_r, num_buffers,
+    skip_index): seconds}}``. Timings include one warmup (compile) call,
     then ``iters`` measured calls each. Resident configs use
-    ``dict_block_r=0`` in the timing key (the knob only exists on the
-    streamed path) and are skipped entirely when the dictionaries exceed
-    the VMEM residency budget.
+    ``dict_block_r=0`` / ``num_buffers=0`` in the timing key (the knobs
+    only exist on the streamed path) and are skipped entirely when the
+    dictionaries exceed the VMEM residency budget (counting only the
+    tables ``infix`` loads).
     """
     if interpret is None:
         interpret = _interpret_default()
-    roots, _ = core_stemmer.unwrap_dict(roots)
-    resident_ok = (sum(int(d.shape[0])
-                       for d in (roots.tri, roots.quad, roots.bi))
-                   <= sf.MAX_RESIDENT_KEYS)
+    roots, _, _ = core_stemmer.unwrap_dict(roots)
+    resident_ok = (sf.choose_residency(roots, "auto", infix=infix)
+                   == "resident")
     timings = {}
     # clamp tiles to the batch (small batches still tune over strategies)
     bbs = sorted({min(bb, words.shape[0]) for bb in block_bs})
@@ -167,24 +178,34 @@ def autotune_stem_fused(words, roots, *, infix: bool = True,
             for res in residencies:
                 if res == "resident" and not resident_ok:
                     continue
-                # dict tiling is a no-op knob on the resident path
-                drs = dict_block_rs if res == "streamed" else (0,)
+                # dict tiling / ladder depth / skip are no-op knobs on
+                # the resident path
+                streamed = res == "streamed"
+                drs = dict_block_rs if streamed else (0,)
+                nbs = num_bufferss if streamed else (0,)
+                sks = skip_indexes if streamed else (True,)
                 for dr in drs:
-                    call = functools.partial(
-                        extract_roots_fused, words, roots, infix=infix,
-                        match=m, block_b=bb, residency=res,
-                        dict_block_r=dr or 8, interpret=interpret)
-                    jax.block_until_ready(call())  # warmup/compile
-                    t0 = time.perf_counter()
-                    for _ in range(iters):
-                        jax.block_until_ready(call())
-                    timings[(bb, m, res, dr)] = (
-                        time.perf_counter() - t0) / iters
+                    for nb in nbs:
+                        for sk in sks:
+                            call = functools.partial(
+                                extract_roots_fused, words, roots,
+                                infix=infix, match=m, block_b=bb,
+                                residency=res, dict_block_r=dr or 8,
+                                num_buffers=nb or 2, skip_index=sk,
+                                interpret=interpret)
+                            jax.block_until_ready(call())  # warmup/compile
+                            t0 = time.perf_counter()
+                            for _ in range(iters):
+                                jax.block_until_ready(call())
+                            timings[(bb, m, res, dr, nb, sk)] = (
+                                time.perf_counter() - t0) / iters
     if not timings:
         raise ValueError(
             "autotune_stem_fused: no runnable config — the dictionaries"
             f" exceed the VMEM residency budget ({sf.MAX_RESIDENT_KEYS}"
             " keys) and residencies excludes 'streamed'")
-    best_bb, best_m, best_res, best_dr = min(timings, key=timings.get)
+    best = min(timings, key=timings.get)
+    best_bb, best_m, best_res, best_dr, best_nb, best_sk = best
     return {"block_b": best_bb, "match": best_m, "residency": best_res,
-            "dict_block_r": best_dr or 8, "timings": timings}
+            "dict_block_r": best_dr or 8, "num_buffers": best_nb or 2,
+            "skip_index": best_sk, "timings": timings}

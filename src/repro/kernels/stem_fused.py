@@ -29,16 +29,30 @@ Layout (see DESIGN.md §5):
     output side.
 
 Dictionaries large enough to pressure VMEM (>~64K keys) take the
-*streamed* Compare path (DESIGN.md §5.3): a second, minor grid axis
-iterates (tile_rows x 128) dictionary tiles through VMEM while the word
-tile, its candidate keys/validity and an OR-accumulating hit mask persist
-in VMEM scratch across the sweep — the stem_match._match_kernel revisit
-pattern lifted into the megakernel. The datapath (stages 1-4) runs only
-on the first revisit; the priority select only on the last. Each tile
-carries a [min, max] range reject, so for sorted dictionaries most tiles
-cost one predicated compare. `residency="resident"|"streamed"|"auto"`
-selects the layout; "auto" streams once the packed dictionaries exceed
-MAX_RESIDENT_KEYS.
+*streamed* Compare path (DESIGN.md §5.3), an explicitly pipelined sweep:
+
+  - a jnp pre-pass (stages 1-4 on the padded batch, shared
+    ``candidate_columns`` body) computes where every batch tile's live
+    candidate keys land among the sorted `(dict_block_r x 128)`
+    dictionary tiles, and emits a per-batch-tile **tile-visit index** —
+    only tiles that can contain a hit are visited, not all of them. The
+    index and per-tile visit counts reach the kernel through scalar
+    prefetch (``pltpu.PrefetchScalarGridSpec``), so tile ids are
+    available for DMA issue before the compute touches them.
+  - the dictionary stream stays in HBM (``memory_space=ANY``) and the
+    kernel drives its own multi-buffered ``pltpu.make_async_copy``
+    ladder (``num_buffers`` deep): the DMA for visit k+num_buffers-1 is
+    started before visit k's bsearch/bank compare runs, replacing the
+    implicit single-stage Pallas pipeline of the previous layout. An
+    OR-accumulating hit mask persists in VMEM scratch across the sweep;
+    the priority select runs once per batch tile after it.
+
+`residency="resident"|"streamed"|"auto"` selects the layout; "auto"
+streams once the packed dictionaries exceed MAX_RESIDENT_KEYS
+(counting only the tables the sweep loads: bi is excluded for
+infix=False). `skip_index=False` degrades the visit index to the full
+sweep — same kernel, every live tile visited — which is the baseline the
+`dict_stream_pipeline` benchmark section compares against.
 """
 from __future__ import annotations
 
@@ -71,18 +85,33 @@ GROUP_TAGS = (
 # (minor grid axis over dictionary tiles, DESIGN.md §5.3).
 MAX_RESIDENT_KEYS = 1 << 16
 RESIDENCIES = ("resident", "streamed", "auto")
+MAX_NUM_BUFFERS = 4
+_KEY_NOWHERE = jnp.iinfo(jnp.int32).min  # lands in no tile: below every min
 
 
-def choose_residency(roots, residency: str = "auto") -> str:
+def _loaded_keys(roots, infix: bool) -> int:
+    """Keys the Compare sweep actually loads: bi only feeds the deinfix
+    group, so infix=False never touches it."""
+    dicts = (roots.tri, roots.quad) + ((roots.bi,) if infix else ())
+    return sum(int(d.shape[0]) for d in dicts)
+
+
+def choose_residency(roots, residency: str = "auto", *,
+                     infix: bool = True) -> str:
     """Resolve residency="auto" against the VMEM budget: keep the packed
-    dictionaries resident while they fit, stream tiles once they don't."""
+    dictionaries resident while they fit, stream tiles once they don't.
+
+    Only the tables the sweep loads count toward the budget: with
+    infix=False the bi dictionary never ships to VMEM, so it must not
+    force a dictionary that otherwise fits onto the streamed path.
+    """
     if residency not in RESIDENCIES:
         raise ValueError(f"unknown residency: {residency!r} (want one of"
                          f" {RESIDENCIES})")
     if residency != "auto":
         return residency
-    total = sum(int(d.shape[0]) for d in (roots.tri, roots.quad, roots.bi))
-    return "streamed" if total > MAX_RESIDENT_KEYS else "resident"
+    return ("streamed" if _loaded_keys(roots, infix) > MAX_RESIDENT_KEYS
+            else "resident")
 
 
 def _bank_hit(flat_dict: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
@@ -133,70 +162,152 @@ def _fused_kernel(words_ref, tri_ref, quad_ref, bi_ref, root_ref, src_ref,
                      n_groups=n_groups)
 
 
-def _fused_streamed_kernel(words_ref, dict_ref, root_ref, src_ref,
-                           keys_sc, valid_sc, hits_sc,
-                           *, n_groups: int, match: str,
-                           tri_tiles: int, quad_tiles: int):
-    """Streamed Compare: grid (batch_tiles, dict_tiles), dict axis minor.
+def _dict_slots(name: str, n_groups: int) -> list:
+    """Candidate-slot columns fed by dictionary ``name`` (static)."""
+    return [g * N_CAND + c for g in range(n_groups)
+            if GROUP_DICTS[g] == name for c in range(N_CAND)]
 
-    The word tile's candidate keys/valid flags and the OR-accumulating hit
-    mask live in VMEM scratch across the dictionary sweep; the datapath
-    runs once per word tile (first revisit), the priority select once
-    (last revisit). The concatenated dictionary stream is
-    [tri tiles | quad tiles | bi tiles]; which groups a tile feeds is a
-    static-boundary comparison on the minor program id. Each tile is
-    internally sorted (sentinel padded), so its first/last element gives a
-    [min, max] range reject: tiles that cannot contain any live candidate
-    key cost one predicated compare and skip the search entirely.
+
+def _visit_tables(keys, valid, tiles: sm.DictTileSet, *, n_groups: int,
+                  block_b: int, skip_index: bool):
+    """The tile-skipping pre-pass: per-batch-tile dictionary tile-visit
+    index from the candidate keys and the sorted tile boundary tables.
+
+    For every batch tile and every dictionary the live candidate keys'
+    [min, max] range intersected with the tiles' sorted [mins, maxs]
+    boundaries bounds which tiles can hold a hit; because the tiles
+    partition a sorted dictionary, each key in fact lands in at most ONE
+    tile — `searchsorted(mins, key) - 1`, kept only when the key also
+    falls under that tile's max — so the mask marks exactly the landing
+    tiles (a strict refinement of the range intersection). A hit requires
+    key ∈ dictionary, which implies the key lands in its tile, so
+    sweeping only marked tiles is bit-identical to the full sweep.
+
+    keys int32[bp, n_slots], valid bool[bp, n_slots] (stages 1-4 output
+    for the padded batch) ->
+
+      n_visits  int32[batch_tiles]           live tiles per batch tile
+      visit_idx int32[batch_tiles, n_tiles]  global tile ids, the
+                n_visits live ones packed to the front in ascending
+                order (pad entries are never fetched)
+
+    skip_index=False marks every tile of every swept dictionary (bi is
+    still excluded for infix=False) — the full-sweep baseline through
+    the same kernel.
     """
-    j = pl.program_id(1)
-    n_tiles = pl.num_programs(1)
+    bt = keys.shape[0] // block_b
+    tri_t, quad_t, bi_t = tiles.counts
+    masks = []
+    for name, base, td in (("tri", 0, tri_t), ("quad", tri_t, quad_t),
+                           ("bi", tri_t + quad_t, bi_t)):
+        slots = _dict_slots(name, n_groups)
+        if not slots:                # bi with infix=False: never swept
+            masks.append(jnp.zeros((bt, td), bool))
+            continue
+        if not skip_index:           # full sweep: every tile of the dict
+            masks.append(jnp.ones((bt, td), bool))
+            continue
+        mins = tiles.mins[base:base + td]
+        maxs = tiles.maxs[base:base + td]
+        k = jnp.where(valid[:, slots], keys[:, slots], _KEY_NOWHERE)
+        k = k.reshape(bt, -1)        # [bt, block_b * n_dict_slots]
+        t = jnp.clip(jnp.searchsorted(mins, k, side="right") - 1, 0, td - 1)
+        lands = (jnp.take(mins, t) <= k) & (k <= jnp.take(maxs, t))
+        bi_idx = jnp.broadcast_to(jnp.arange(bt)[:, None], k.shape)
+        mask = jnp.zeros((bt, td), bool)
+        mask = mask.at[bi_idx.reshape(-1), t.reshape(-1)].max(lands.reshape(-1))
+        masks.append(mask)
+    mask = jnp.concatenate(masks, axis=1)              # [bt, n_tiles]
+    n_visits = mask.sum(axis=1).astype(jnp.int32)
+    # stable argsort on ~mask packs the marked tile ids to the front,
+    # ascending — the visit order stays the sorted [tri | quad | bi] order
+    visit_idx = jnp.argsort(~mask, axis=1, stable=True).astype(jnp.int32)
+    return n_visits, visit_idx
+
+
+def _fused_pipeline_kernel(nvis_ref, vis_ref, words_ref, dict_ref,
+                           root_ref, src_ref, dict_bufs, hits_sc, dma_sems,
+                           *, n_groups: int, match: str, num_buffers: int,
+                           dict_block_r: int, tri_tiles: int,
+                           quad_tiles: int):
+    """Streamed Compare: grid (batch_tiles,), explicit DMA ladder inside.
+
+    The dictionary stream stays in HBM (memory_space=ANY); the kernel
+    walks this batch tile's visit list (scalar-prefetched ``vis_ref``,
+    ``nvis_ref[i]`` entries) and drives a ``num_buffers``-deep rotating
+    make_async_copy ladder: the copy for visit k + num_buffers - 1 is
+    issued before visit k's compare runs, so tile DMA overlaps the
+    bsearch/bank compute with a tunable lookahead (num_buffers=1 is the
+    no-overlap baseline). Which dictionary a tile feeds is a static
+    boundary compare on its *global tile id* (not the loop index — the
+    visit list has holes where tiles were skipped). Each tile is
+    internally sorted, so its first/last element still gives the fine
+    [min, max] reject below the pre-pass' coarse one.
+    """
+    i = pl.program_id(0)
+    n = nvis_ref[i]
     n_slots = n_groups * N_CAND
+    w = words_ref[...]                             # (bb, 16) int32
+    key_cols, val_cols = sdp.candidate_columns(w)  # stages 1-4
+    keys = jnp.stack(key_cols[:n_slots], axis=1)
+    valid = jnp.stack(val_cols[:n_slots], axis=1) > 0
+    hits_sc[...] = jnp.zeros_like(hits_sc)
 
-    @pl.when(j == 0)
-    def _ingest():                                 # stages 1-4, once per tile
-        w = words_ref[...]                         # (bb, 16) int32
-        key_cols, val_cols = sdp.candidate_columns(w)
-        keys_sc[...] = jnp.stack(key_cols[:n_slots], axis=1)
-        valid_sc[...] = jnp.stack(val_cols[:n_slots], axis=1)
-        hits_sc[...] = jnp.zeros_like(hits_sc)
+    def tile_dma(k, slot):
+        t = vis_ref[i, k]
+        return pltpu.make_async_copy(
+            dict_ref.at[pl.ds(t * dict_block_r, dict_block_r), :],
+            dict_bufs.at[slot], dma_sems.at[slot])
 
-    keys = keys_sc[...]                            # (bb, n_slots)
-    valid = valid_sc[...] > 0
-    tile = dict_ref[...].reshape(-1)               # (tile_rows * LANE,)
+    for s in range(num_buffers - 1):               # warm the ladder
+        @pl.when(s < n)
+        def _start(s=s):
+            tile_dma(s, s).start()
 
-    # which dictionary does tile j hold? static boundaries on the minor axis
-    dict_active = {"tri": j < tri_tiles,
-                   "quad": (j >= tri_tiles) & (j < tri_tiles + quad_tiles),
-                   "bi": j >= tri_tiles + quad_tiles}
-    slot_active = jnp.concatenate(
-        [jnp.broadcast_to(dict_active[GROUP_DICTS[g]], (N_CAND,))
-         for g in range(n_groups)])                # (n_slots,)
+    def visit(k, carry):
+        look = k + num_buffers - 1                 # ladder lookahead
+        @pl.when(look < n)
+        def _fetch_ahead():
+            tile_dma(look, jax.lax.rem(look, num_buffers)).start()
+        slot = jax.lax.rem(k, num_buffers)
+        tile_dma(k, slot).wait()
+        tile_id = vis_ref[i, k]
+        tile = dict_bufs[slot].reshape(-1)         # (dict_block_r * LANE,)
 
-    # ---- cheap tile-range reject: tiles are internally sorted ------------
-    in_range = ((keys >= tile[0]) & (keys <= tile[-1])
-                & valid & slot_active[None, :])
+        # which dictionary holds this tile? static boundaries on tile_id
+        dict_active = {
+            "tri": tile_id < tri_tiles,
+            "quad": (tile_id >= tri_tiles) & (tile_id < tri_tiles + quad_tiles),
+            "bi": tile_id >= tri_tiles + quad_tiles}
+        slot_active = jnp.concatenate(
+            [jnp.broadcast_to(dict_active[GROUP_DICTS[g]], (N_CAND,))
+             for g in range(n_groups)])            # (n_slots,)
 
-    @pl.when(in_range.any())
-    def _compare():                                # stage 5a on this tile
-        hit_cols = []
-        for g in range(n_groups):
-            kg = keys[:, g * N_CAND : (g + 1) * N_CAND]
-            hit = (sm.bsearch_hit(tile, kg) if match == "bsearch"
-                   else _bank_hit(tile, kg))
-            hit_cols.append(hit & dict_active[GROUP_DICTS[g]])
-        hits = jnp.concatenate(hit_cols, axis=1) & valid
-        hits_sc[...] |= hits.astype(jnp.int32)
+        # fine tile-range reject: tiles are internally sorted
+        in_range = ((keys >= tile[0]) & (keys <= tile[-1])
+                    & valid & slot_active[None, :])
 
-    @pl.when(j == n_tiles - 1)
-    def _select():                                 # stage 5b, once per tile
-        _priority_select(keys, hits_sc[...], root_ref, src_ref,
-                         n_groups=n_groups)
+        @pl.when(in_range.any())
+        def _compare():                            # stage 5a on this tile
+            hit_cols = []
+            for g in range(n_groups):
+                kg = keys[:, g * N_CAND : (g + 1) * N_CAND]
+                hit = (sm.bsearch_hit(tile, kg) if match == "bsearch"
+                       else _bank_hit(tile, kg))
+                hit_cols.append(hit & dict_active[GROUP_DICTS[g]])
+            hits = jnp.concatenate(hit_cols, axis=1) & valid
+            hits_sc[...] |= hits.astype(jnp.int32)
+        return carry
+
+    jax.lax.fori_loop(0, n, visit, 0)
+    _priority_select(keys, hits_sc[...], root_ref, src_ref,
+                     n_groups=n_groups)            # stage 5b
 
 
 @functools.partial(
     jax.jit, static_argnames=("infix", "match", "block_b", "residency",
-                              "dict_block_r", "interpret"))
+                              "dict_block_r", "num_buffers", "skip_index",
+                              "interpret"))
 def stem_fused_pallas(
     words: jnp.ndarray,
     roots,
@@ -206,6 +317,8 @@ def stem_fused_pallas(
     block_b: int = 256,
     residency: str = "auto",
     dict_block_r: int = 8,
+    num_buffers: int = 2,
+    skip_index: bool = True,
     interpret: bool = False,
 ):
     """words int32[B,16] + RootDictArrays -> (root int32[B,4], source int32[B]).
@@ -216,29 +329,48 @@ def stem_fused_pallas(
       "resident"  grid = batch tiles only; the packed dictionaries ride
                   along as constant-index-map VMEM blocks. Raises past
                   MAX_RESIDENT_KEYS (it would thrash VMEM).
-      "streamed"  grid = (batch tiles, dict tiles); (dict_block_r x 128)
-                  tiles stream through VMEM while keys/valid/hit-mask
-                  persist in scratch — unbounded dictionary sizes.
+      "streamed"  grid = batch tiles; per batch tile the kernel sweeps a
+                  scalar-prefetched visit list of (dict_block_r x 128)
+                  dictionary tiles, DMA'd from HBM through a
+                  ``num_buffers``-deep explicit ladder; with
+                  ``skip_index`` only the tiles a candidate key can land
+                  in are visited at all. The visit table itself costs
+                  ``batch_tiles x n_tiles`` int32 of scalar-prefetch
+                  (SMEM) space — 256K keys at dict_block_r=8 with 32
+                  batch tiles is ~33 KB; very large batch x dictionary
+                  products should raise dict_block_r (or chunk the
+                  batch, as serving's fixed super-tiles already do) to
+                  stay inside scalar memory on real hardware.
       "auto"      resident while the dictionaries fit, streamed beyond.
 
+    ``num_buffers`` (1..4; streamed only) sets the DMA lookahead depth —
+    2 double-buffers, 1 is the no-overlap baseline. ``skip_index=False``
+    (streamed only) disables tile skipping and sweeps every tile of the
+    loaded dictionaries through the same ladder.
+
     Bit-identical to ``core.stemmer.extract_roots`` (and pyref) in every
-    (residency, match) combination.
+    (residency, match, num_buffers, skip_index) combination.
 
     ``roots`` also accepts a ``core.stemmer.ResolvedRootDict`` handle:
-    its pinned residency replaces the residency argument (serving
-    resolves "auto" once at dictionary-publish time, so a hot swap whose
-    arrays keep their shapes replays the cached trace).
+    its pinned residency replaces the residency argument, and a handle
+    carrying a prebuilt ``stem_match.DictTileSet`` of matching
+    dict_block_r skips the per-call pad/concat of the tile stream
+    (serving resolves both once at dictionary-publish time, so a hot
+    swap whose arrays keep their shapes replays the cached trace).
     """
     if match not in ("bank", "bsearch"):
         raise ValueError(f"unknown in-kernel match strategy: {match}")
+    if not 1 <= num_buffers <= MAX_NUM_BUFFERS:
+        raise ValueError(f"num_buffers must be in 1..{MAX_NUM_BUFFERS},"
+                         f" got {num_buffers}")
     n_groups = 5 if infix else 2
-    roots, residency = core_stemmer.unwrap_dict(roots, residency)
-    residency = choose_residency(roots, residency)
+    roots, residency, tiles = core_stemmer.unwrap_dict(roots, residency)
+    residency = choose_residency(roots, residency, infix=infix)
 
-    total_keys = sum(int(d.shape[0]) for d in (roots.tri, roots.quad, roots.bi))
-    if residency == "resident" and total_keys > MAX_RESIDENT_KEYS:
+    loaded = _loaded_keys(roots, infix)
+    if residency == "resident" and loaded > MAX_RESIDENT_KEYS:
         raise ValueError(
-            f"dictionaries too large for VMEM residency ({total_keys} keys >"
+            f"dictionaries too large for VMEM residency ({loaded} keys >"
             f" {MAX_RESIDENT_KEYS}); use residency='streamed' or 'auto'"
             " (DESIGN.md §5.3)")
 
@@ -249,15 +381,18 @@ def stem_fused_pallas(
     wp = jnp.pad(words, ((0, pad), (0, 0)))
     bp = wp.shape[0]
 
-    word_spec = pl.BlockSpec((block_b, ab.MAXLEN), lambda i, *j: (i, 0))
-    out_specs = [pl.BlockSpec((block_b, 4), lambda i, *j: (i, 0)),
-                 pl.BlockSpec((block_b, 1), lambda i, *j: (i, 0))]
+    word_spec = pl.BlockSpec((block_b, ab.MAXLEN), lambda i, *a: (i, 0))
+    out_specs = [pl.BlockSpec((block_b, 4), lambda i, *a: (i, 0)),
+                 pl.BlockSpec((block_b, 1), lambda i, *a: (i, 0))]
     out_shape = [jax.ShapeDtypeStruct((bp, 4), jnp.int32),
                  jax.ShapeDtypeStruct((bp, 1), jnp.int32)]
 
     if residency == "resident":
         prep = sm.pad_dict_sorted if match == "bsearch" else sm.pad_dict_lanes
-        tri2, quad2, bi2 = prep(roots.tri), prep(roots.quad), prep(roots.bi)
+        # infix=False never reads the bi dict: ship a one-lane placeholder
+        # so the unused table doesn't occupy VMEM (see choose_residency)
+        bi = roots.bi if infix else jnp.full((1,), sm.DICT_PAD, jnp.int32)
+        tri2, quad2, bi2 = prep(roots.tri), prep(roots.quad), prep(bi)
         dict_spec = lambda d: pl.BlockSpec(d.shape, lambda i: (0, 0))
         root, source = pl.pallas_call(
             functools.partial(_fused_kernel, n_groups=n_groups, match=match),
@@ -270,26 +405,69 @@ def stem_fused_pallas(
         )(wp, tri2, quad2, bi2)
         return root[:b], source[:b, 0]
 
-    # ---- streamed: minor grid axis sweeps [tri | quad | bi] dict tiles ---
-    dicts = [roots.tri, roots.quad] + ([roots.bi] if n_groups == 5 else [])
-    tiles = [sm.pad_dict_tiles(d, dict_block_r) for d in dicts]
-    counts = [t.shape[0] // dict_block_r for t in tiles]
-    tri_tiles, quad_tiles = counts[0], counts[1]
-    dict_stream = jnp.concatenate(tiles, axis=0)
+    # ---- streamed: scalar-prefetched visit index + explicit DMA ladder ---
+    if tiles is None or tiles.dict_block_r != dict_block_r:
+        tiles = sm.build_dict_tiles(roots.tri, roots.quad, roots.bi,
+                                    dict_block_r)
+    tri_tiles, quad_tiles, _ = tiles.counts
     n_slots = n_groups * N_CAND
 
-    root, source = pl.pallas_call(
-        functools.partial(_fused_streamed_kernel, n_groups=n_groups,
-                          match=match, tri_tiles=tri_tiles,
-                          quad_tiles=quad_tiles),
-        grid=(bp // block_b, sum(counts)),
+    # pre-pass (stages 1-4 in jnp, the same candidate_columns body the
+    # kernel runs): which dictionary tiles can this batch tile hit?
+    kc, vc = sdp.candidate_columns(wp)
+    n_visits, visit_idx = _visit_tables(
+        jnp.stack(kc[:n_slots], axis=1), jnp.stack(vc[:n_slots], axis=1) > 0,
+        tiles, n_groups=n_groups, block_b=block_b, skip_index=skip_index)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # (n_visits, visit_idx) -> SMEM
+        grid=(bp // block_b,),
         in_specs=[word_spec,
-                  pl.BlockSpec((dict_block_r, sm.LANE), lambda i, j: (j, 0))],
+                  pl.BlockSpec(memory_space=pltpu.ANY)],  # dict stays in HBM
         out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((num_buffers, dict_block_r, sm.LANE), jnp.int32),
+            pltpu.VMEM((block_b, n_slots), jnp.int32),
+            pltpu.SemaphoreType.DMA((num_buffers,)),
+        ],
+    )
+    root, source = pl.pallas_call(
+        functools.partial(_fused_pipeline_kernel, n_groups=n_groups,
+                          match=match, num_buffers=num_buffers,
+                          dict_block_r=dict_block_r, tri_tiles=tri_tiles,
+                          quad_tiles=quad_tiles),
+        grid_spec=grid_spec,
         out_shape=out_shape,
-        scratch_shapes=[pltpu.VMEM((block_b, n_slots), jnp.int32),
-                        pltpu.VMEM((block_b, n_slots), jnp.int32),
-                        pltpu.VMEM((block_b, n_slots), jnp.int32)],
         interpret=interpret,
-    )(wp, dict_stream)
+    )(n_visits, visit_idx, wp, tiles.stream)
     return root[:b], source[:b, 0]
+
+
+def tile_visit_stats(words, roots, *, infix: bool = True, block_b: int = 256,
+                     dict_block_r: int = 8, skip_index: bool = True) -> dict:
+    """Run only the tile-skipping pre-pass and report visit counts.
+
+    Returns ``{"visited": total tile visits across batch tiles,
+    "full_sweep": batch_tiles * live dictionary tiles (what
+    skip_index=False visits), "batch_tiles", "dict_tiles"}`` — the
+    numbers the ``dict_stream_pipeline`` benchmark rows record so the
+    skip index's coverage is tracked next to its timings.
+    """
+    roots, _, tiles = core_stemmer.unwrap_dict(roots, "auto")
+    if tiles is None or tiles.dict_block_r != dict_block_r:
+        tiles = sm.build_dict_tiles(roots.tri, roots.quad, roots.bi,
+                                    dict_block_r)
+    n_groups = 5 if infix else 2
+    b = words.shape[0]
+    pad = (-b) % block_b
+    wp = jnp.pad(words, ((0, pad), (0, 0)))
+    n_slots = n_groups * N_CAND
+    kc, vc = sdp.candidate_columns(wp)
+    n_visits, _ = _visit_tables(
+        jnp.stack(kc[:n_slots], axis=1), jnp.stack(vc[:n_slots], axis=1) > 0,
+        tiles, n_groups=n_groups, block_b=block_b, skip_index=skip_index)
+    bt = wp.shape[0] // block_b
+    tri_t, quad_t, bi_t = tiles.counts
+    live = tri_t + quad_t + (bi_t if infix else 0)
+    return {"visited": int(jnp.sum(n_visits)), "full_sweep": bt * live,
+            "batch_tiles": bt, "dict_tiles": live}

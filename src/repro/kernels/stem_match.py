@@ -19,6 +19,7 @@ never produces a match.
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +63,7 @@ def pad_dict_tiles(dict_keys: jnp.ndarray, tile_rows: int) -> jnp.ndarray:
     Sentinel padding on the right keeps every tile internally sorted, so a
     consumer can binary-search each tile independently and use the tile's
     first/last element as a [min, max] range reject (the streamed megakernel
-    Compare path, stem_fused._fused_streamed_kernel). Empty / placeholder
+    Compare path, stem_fused._fused_pipeline_kernel). Empty / placeholder
     dictionaries still produce one full sentinel tile.
     """
     r = dict_keys.shape[0]
@@ -70,6 +71,60 @@ def pad_dict_tiles(dict_keys: jnp.ndarray, tile_rows: int) -> jnp.ndarray:
     rp = max(per_tile, ((r + per_tile - 1) // per_tile) * per_tile)
     return jnp.pad(dict_keys, (0, rp - r),
                    constant_values=DICT_SENTINEL).reshape(-1, LANE)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class DictTileSet:
+    """The streamed megakernel's dictionary layout, prebuilt.
+
+    ``stream`` is the concatenated `[tri | quad | bi]` tile stream from
+    :func:`pad_dict_tiles` (each `(dict_block_r x LANE)` tile internally
+    sorted, sentinel-padded); ``mins`` / ``maxs`` are the per-tile sorted
+    boundary tables (first/last element of every tile) that the tile-visit
+    pre-pass intersects candidate keys against (stem_fused._visit_tables).
+    Tile counts and the tile height ride as pytree aux data, so a jit
+    trace is keyed on them: serving precomputes a DictTileSet once at
+    dictionary-publish time (serve.DictStore -> core.stemmer.resolve_dict)
+    and every launch — including hot swaps whose shapes match — replays
+    the cached trace without re-padding or re-concatenating the tables.
+    """
+
+    stream: jnp.ndarray            # int32 [n_tiles * dict_block_r, LANE]
+    mins: jnp.ndarray              # int32 [n_tiles] first element per tile
+    maxs: jnp.ndarray              # int32 [n_tiles] last element per tile
+    dict_block_r: int              # tile height in LANE rows (static)
+    counts: tuple                  # (tri_tiles, quad_tiles, bi_tiles) (static)
+
+    def tree_flatten(self):
+        return ((self.stream, self.mins, self.maxs),
+                (self.dict_block_r, self.counts))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_tiles(self) -> int:
+        return sum(self.counts)
+
+
+def build_dict_tiles(tri: jnp.ndarray, quad: jnp.ndarray, bi: jnp.ndarray,
+                     dict_block_r: int) -> DictTileSet:
+    """Pad + concatenate the three sorted dictionaries into the streamed
+    tile stream and extract the per-tile [min, max] boundary tables.
+
+    All three dictionaries are always present in the stream (the bi table
+    too, even for infix=False sweeps): with the tile-visit index an unused
+    table's tiles are simply never visited, and a single layout keeps one
+    jit trace per shape regardless of the infix flag.
+    """
+    tiles = [pad_dict_tiles(d, dict_block_r) for d in (tri, quad, bi)]
+    counts = tuple(t.shape[0] // dict_block_r for t in tiles)
+    stream = jnp.concatenate(tiles, axis=0)
+    flat = stream.reshape(-1, dict_block_r * LANE)   # one row per tile
+    return DictTileSet(stream=stream, mins=flat[:, 0], maxs=flat[:, -1],
+                       dict_block_r=dict_block_r, counts=counts)
 
 
 def bsearch_hit(flat_dict: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:

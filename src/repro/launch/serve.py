@@ -58,8 +58,14 @@ def serve_stemmer(args) -> None:
     from repro.core import corpus, stemmer
 
     d = corpus.build_dictionary(n_tri=1000, n_quad=120, seed=0)
-    store = DictStore(stemmer.RootDictArrays.from_rootdict(d))
+    # the store pins residency AND the streamed tile/boundary tables per
+    # publish, so hot swaps replay the serving trace (DESIGN.md §6)
+    store = DictStore(stemmer.RootDictArrays.from_rootdict(d),
+                      dict_block_r=args.dict_block_r)
     eng = Engine(StemmerWorkload(store, block_b=args.block_b,
+                                 dict_block_r=args.dict_block_r,
+                                 num_buffers=args.num_buffers,
+                                 skip_index=not args.full_sweep,
                                  max_inflight=args.inflight,
                                  data_devices=args.devices))
 
@@ -106,6 +112,15 @@ def main():
                     help="data devices per super-tile: each launch is a"
                          " [devices * block_b, 16] tile shard_map'd over"
                          " a ('data',) mesh (dist.shard_batch)")
+    ap.add_argument("--dict-block-r", type=int, default=8,
+                    help="streamed dictionary tile height in 128-lane"
+                         " rows; also pins the publish-time tile stream")
+    ap.add_argument("--num-buffers", type=int, default=2,
+                    help="streamed-path DMA ladder depth (1 = no"
+                         " overlap, 2 = double buffering, up to 4)")
+    ap.add_argument("--full-sweep", action="store_true",
+                    help="disable the tile-visit skip index (sweep every"
+                         " dictionary tile; the skip-off baseline)")
     args = ap.parse_args()
 
     if args.workload == "stemmer":

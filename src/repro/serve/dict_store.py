@@ -18,8 +18,14 @@ contract for that swap:
 
 Each version wraps its arrays in a ``core.stemmer.ResolvedRootDict``
 handle at publish time: residency="auto" is resolved against the VMEM
-budget once, so a swap whose arrays keep their shapes replays the
-megakernel's cached jit trace (no re-trace on the serving hot path).
+budget once (scoped by ``infix`` to the tables the sweep loads), so a
+swap whose arrays keep their shapes replays the megakernel's cached jit
+trace (no re-trace on the serving hot path). Constructing the store
+with ``dict_block_r`` additionally pins the streamed layout's
+``DictTileSet`` — the padded `[tri | quad | bi]` tile stream plus the
+per-tile boundary tables the tile-visit pre-pass needs — into every
+published handle, so serving launches never re-pad or re-concatenate
+the dictionary per call and hot swaps keep the cached trace.
 Responses record the version(s) that served them (StemRequest.dict_
 versions), and ``get(version)`` resolves any published version back to
 its arrays, so served roots stay auditable after further swaps.
@@ -84,10 +90,13 @@ class DictStore:
     """
 
     def __init__(self, arrays, *, residency: str = "auto",
-                 keep_history: bool = True):
+                 keep_history: bool = True, infix: bool = True,
+                 dict_block_r: int | None = None):
         self._lock = threading.Lock()       # guards the version table
         self._pub_lock = threading.Lock()   # serialises publishers
         self._residency = residency
+        self._infix = infix
+        self._dict_block_r = dict_block_r
         self._keep_history = keep_history
         self._versions: dict[int, DictVersion] = {}
         self._current: DictVersion | None = None
@@ -116,8 +125,9 @@ class DictStore:
         with self._pub_lock:
             if isinstance(arrays, pyref.RootDict):
                 arrays = core_stemmer.RootDictArrays.from_rootdict(arrays)
-            handle = core_stemmer.resolve_dict(arrays,
-                                               residency=self._residency)
+            handle = core_stemmer.resolve_dict(
+                arrays, residency=self._residency, infix=self._infix,
+                dict_block_r=self._dict_block_r)
             return self._install(handle)
 
     def publish_delta(self, insert=None, remove=None) -> int:
@@ -182,8 +192,9 @@ class DictStore:
                     out = np.asarray([-1], np.int32)  # empty-table sentinel
                 merged[name] = jnp.asarray(out)
             arrays = core_stemmer.RootDictArrays(**merged)
-            handle = core_stemmer.resolve_dict(arrays,
-                                               residency=self._residency)
+            handle = core_stemmer.resolve_dict(
+                arrays, residency=self._residency, infix=self._infix,
+                dict_block_r=self._dict_block_r)
             return self._install(handle)
 
     def acquire(self) -> DictVersion:

@@ -367,6 +367,7 @@ class StemmerWorkload:
 
     def __init__(self, store, *, block_b: int = 256, infix: bool = True,
                  match: str = "bsearch", dict_block_r: int = 8,
+                 num_buffers: int = 2, skip_index: bool = True,
                  max_inflight: int = 2, data_devices: int = 1,
                  max_requests: int | None = None,
                  interpret: bool | None = None):
@@ -379,6 +380,8 @@ class StemmerWorkload:
         self.infix = infix
         self.match = match
         self.dict_block_r = dict_block_r
+        self.num_buffers = num_buffers
+        self.skip_index = skip_index
         self.max_inflight = max_inflight
         self.data_devices = data_devices
         self.max_requests = max_requests
@@ -503,12 +506,16 @@ class StemmerWorkload:
                 roots, sources = ops.extract_roots_sharded(
                     jnp.asarray(tile), dv.handle, self._mesh,
                     infix=self.infix, match=self.match, block_b=self.block_b,
-                    dict_block_r=self.dict_block_r, interpret=self.interpret)
+                    dict_block_r=self.dict_block_r,
+                    num_buffers=self.num_buffers, skip_index=self.skip_index,
+                    interpret=self.interpret)
             else:
                 roots, sources = ops.extract_roots_fused(
                     jnp.asarray(tile), dv.handle, infix=self.infix,
                     match=self.match, block_b=self.block_b,
-                    dict_block_r=self.dict_block_r, interpret=self.interpret)
+                    dict_block_r=self.dict_block_r,
+                    num_buffers=self.num_buffers, skip_index=self.skip_index,
+                    interpret=self.interpret)
         except BaseException:
             # a failed launch must not wedge the engine: return the slot
             # and leave every word undispatched so a later tick retries

@@ -50,6 +50,20 @@ SCRIPT = textwrap.dedent("""
         np.testing.assert_array_equal(np.asarray(got_s), np.asarray(one_s))
     print("SHARD_BATCH_PARITY_OK")
 
+    # --- streamed pipeline knobs across the mesh: a resolved handle with
+    # publish-time tile/boundary tables, DMA ladder depth, skip on/off --
+    grown = corpus.grow_root_arrays(arrays, 100_000, seed=3)
+    handle = stemmer.resolve_dict(grown, dict_block_r=8)
+    assert handle.residency == "streamed" and handle.tiles is not None
+    want_r, want_s = stemmer.stem_batch(jnp.asarray(enc[:128]), grown)
+    for nb, sk in ((1, True), (2, True), (2, False)):
+        got_r, got_s = shard_batch(jnp.asarray(enc[:128]), handle, mesh,
+                                   block_b=32, num_buffers=nb,
+                                   skip_index=sk, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got_r), np.asarray(want_r))
+        np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    print("SHARD_PIPELINE_KNOBS_OK")
+
     # --- sharded serving: super-tile coalescing through the ring ------
     store = DictStore(arrays)
     eng = Engine(StemmerWorkload(store, block_b=16, data_devices=4,
@@ -100,8 +114,8 @@ def test_sharded_serve_four_devices():
     env.pop("XLA_FLAGS", None)
     proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                           capture_output=True, text=True, timeout=600)
-    for marker in ("SHARD_BATCH_PARITY_OK", "SHARD_SERVE_PARITY_OK",
-                   "SHARD_SWAP_OK"):
+    for marker in ("SHARD_BATCH_PARITY_OK", "SHARD_PIPELINE_KNOBS_OK",
+                   "SHARD_SERVE_PARITY_OK", "SHARD_SWAP_OK"):
         assert marker in proc.stdout, proc.stderr[-2000:]
 
 

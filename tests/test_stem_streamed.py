@@ -203,14 +203,20 @@ def test_autotune_covers_residency(small):
     cfg = ops.autotune_stem_fused(e, small, block_bs=(64,),
                                   matches=("bsearch",),
                                   residencies=("resident", "streamed"),
-                                  dict_block_rs=(2, 4), iters=1,
+                                  dict_block_rs=(2, 4), num_bufferss=(1, 2),
+                                  skip_indexes=(True, False), iters=1,
                                   interpret=True)
     assert cfg["residency"] in ("resident", "streamed")
     assert cfg["dict_block_r"] >= 1
+    assert cfg["num_buffers"] >= 1
+    assert isinstance(cfg["skip_index"], bool)
     tuned = set(cfg["timings"])
-    assert (64, "bsearch", "resident", 0) in tuned
-    assert (64, "bsearch", "streamed", 2) in tuned
-    assert (64, "bsearch", "streamed", 4) in tuned
+    # resident rows use placeholder zeros for the streamed-only knobs
+    assert (64, "bsearch", "resident", 0, 0, True) in tuned
+    for dr in (2, 4):
+        for nb in (1, 2):
+            for sk in (True, False):
+                assert (64, "bsearch", "streamed", dr, nb, sk) in tuned
 
 
 def test_autotune_no_runnable_config_raises(big):
