@@ -1,0 +1,113 @@
+"""Dispatch-overhead share of serve latency: per-tile vs megabatch vs
+persistent launches.
+
+The paper's pipelined processor never stops between words; the serving
+analogue of a pipeline stall is the per-``pallas_call`` dispatch cost.
+This section times the same ``n_tiles x block_b`` words three ways:
+
+  per_tile    n_tiles separate ``extract_roots_fused`` launches of one
+              [block_b, 16] tile each — the pre-megabatch serving hot
+              path, paying dispatch once per tile
+  megabatch   ONE ``extract_roots_fused`` launch whose grid batch axis
+              spans all n_tiles tiles (chunked only if the streamed
+              visit table would blow the SMEM budget)
+  persistent  ONE ``extract_roots_persistent`` launch fori_looping a
+              device-side work-descriptor ring over the tiles
+
+Each row records the ``pallas_call`` dispatch count (via
+``ops.dispatch_count()``, which mirrors the kernel's chunk math) and
+dispatches per word; the per_tile row additionally records
+``dispatch_overhead_share`` — the fraction of its latency the best
+coalesced mode at the same depth eliminates, i.e. the share of serve
+latency that was dispatch, not compute. CI asserts megabatch rows beat
+per-tile rows on dispatches per word and that the drop reaches 4x by
+n_tiles >= 16.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import corpus, stemmer
+from repro.kernels import ops
+
+MODES = ("per_tile", "megabatch", "persistent")
+
+
+def _time(fn, iters: int) -> float:
+    jax.block_until_ready(fn())          # warmup: compile + jit-cache fill
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+def run(n_tiless=(1, 4, 16, 64), block_b: int = 128, iters: int = 2,
+        match: str = "bsearch"):
+    d = corpus.build_dictionary(n_tri=1000, n_quad=120, seed=0)
+    arrays = stemmer.RootDictArrays.from_rootdict(d)
+    words, _, _ = corpus.build_corpus(n_words=max(n_tiless) * block_b, seed=1)
+    enc = jnp.asarray(corpus.encode_corpus(words))
+
+    rows = []
+    for n_tiles in n_tiless:
+        n_words = n_tiles * block_b
+        batch = enc[:n_words]
+        tiles = [enc[t * block_b:(t + 1) * block_b] for t in range(n_tiles)]
+
+        def per_tile():
+            out = [ops.extract_roots_fused(t, arrays, block_b=block_b,
+                                           match=match) for t in tiles]
+            return out[-1]
+
+        def megabatch():
+            return ops.extract_roots_fused(batch, arrays, block_b=block_b,
+                                           match=match)
+
+        def persistent():
+            return ops.extract_roots_persistent(batch, arrays,
+                                                block_b=block_b, match=match)
+
+        by_mode = {}
+        for mode, fn in (("per_tile", per_tile), ("megabatch", megabatch),
+                         ("persistent", persistent)):
+            dt = _time(fn, iters)
+            ops.reset_dispatch_count()
+            jax.block_until_ready(fn())
+            dispatches = ops.dispatch_count()
+            by_mode[mode] = (dt, dispatches)
+            rows.append({
+                "name": f"launch_overhead_{mode}_t{n_tiles}_b{block_b}",
+                "mode": mode,
+                "megabatch": mode != "per_tile",
+                "n_tiles": n_tiles,
+                "block_b": block_b,
+                "n_words": n_words,
+                "us_per_call": 1e6 * dt,
+                "us_per_word": 1e6 * dt / n_words,
+                "dispatches": dispatches,
+                "dispatches_per_word": dispatches / n_words,
+            })
+        # dispatch-overhead share: what the best coalesced mode shaves
+        # off the per-tile latency at this depth
+        t_per, _ = by_mode["per_tile"]
+        t_best = min(by_mode["megabatch"][0], by_mode["persistent"][0])
+        rows[-3]["dispatch_overhead_share"] = max(0.0, 1.0 - t_best / t_per)
+    return rows
+
+
+def main(**kw):
+    rows = run(**kw)
+    for r in rows:
+        share = r.get("dispatch_overhead_share")
+        extra = f"_ovh{share:.2f}" if share is not None else ""
+        print(f"{r['name']},{r['us_per_call']:.3f},"
+              f"{r['dispatches']}disp_{r['us_per_word']:.2f}us_per_word"
+              f"{extra}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

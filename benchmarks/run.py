@@ -9,8 +9,12 @@ Prints ``name,us_per_call,derived`` CSV lines:
   dict_stream_pipeline_* §5.3 (pipelined streamed sweep: DMA ladder
                           depth x tile-visit skip index, visit counts
                           recorded per row)
-  serve_throughput_*     (serve-path words/sec through
-                          Engine + StemmerWorkload, queue depth x block_b)
+  serve_throughput_*     (serve-path words/sec + p50/p95 request latency
+                          through Engine + StemmerWorkload, queue depth x
+                          block_b x megabatch depth)
+  launch_overhead_*      (dispatch-overhead share: per-tile launches vs
+                          one grid-over-queue megabatch vs the
+                          persistent descriptor-ring kernel)
   table6_*       Table 6 (accuracy ± infix processing)
   table7_*       Table 7 (per-root accuracy, top-frequency roots)
   compare_*      §6.4    (Compare-stage: linear vs sorted search)
@@ -53,10 +57,14 @@ SMOKE_PARAMS = {
                                  num_bufferss=(1, 2), iters=1),
     # both overlap=off (inflight 1) and overlap=on rows must exist in the
     # smoke record (CI fails if either goes missing), plus the swap rows
+    # and megabatch-on rows at every queue depth
     "serve_throughput": dict(queue_depths=(2, 4), block_bs=(32,),
                              words_per_request=16, iters=1,
                              inflight_depths=(1, 2), device_counts=(1,),
-                             swap_keys=4096),
+                             megabatch_tiless=(1, 2), swap_keys=4096),
+    # CI asserts megabatch-on rows have strictly fewer dispatches per
+    # word than per-tile at every depth, and a >= 4x drop at n_tiles 16
+    "launch_overhead": dict(n_tiless=(1, 4, 16), block_b=32, iters=1),
     "accuracy": dict(n_words=2000),
     "compare_stage": dict(n_keys=4096, dict_sizes=(512, 2048),
                           pallas_max_r=2048),
@@ -76,7 +84,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (accuracy_bench, compare_stage, dict_scaling,
-                            roofline, scaling, serve_throughput, throughput)
+                            launch_overhead, roofline, scaling,
+                            serve_throughput, throughput)
 
     sections = [
         ("throughput", throughput.main),
@@ -84,6 +93,7 @@ def main(argv=None) -> None:
         ("dict_scaling", dict_scaling.main),
         ("dict_stream_pipeline", dict_scaling.main_pipeline),
         ("serve_throughput", serve_throughput.main),
+        ("launch_overhead", launch_overhead.main),
         ("accuracy", accuracy_bench.main),
         ("compare_stage", compare_stage.main),
         ("roofline", roofline.main),

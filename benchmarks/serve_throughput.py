@@ -2,14 +2,18 @@
 
 The raw megakernel numbers (throughput/scaling sections) measure one
 launch over a pre-formed batch; this section measures the full serving
-path — queue admission, FIFO super-tile coalescing across requests,
+path — queue admission, FIFO megabatch coalescing across requests,
 megakernel launches through the dispatch/retire ring, per-request
-scatter — over an (overlap x inflight depth x device count x queue
-depth x block_b) sweep. ``inflight=1`` is the synchronous tick (overlap
-off); deeper rings overlap host coalescing/scatter with device compute,
-and the off-vs-on gap at equal queue depth is the host overhead the
-ring hides. ``devices>1`` rows (when the backend has them) shard each
-super-tile over a ("data",) mesh via dist.shard_batch.
+scatter — over an (overlap x inflight depth x device count x megabatch
+depth x queue depth x block_b) sweep. ``inflight=1`` is the synchronous
+tick (overlap off); deeper rings overlap host coalescing/scatter with
+device compute, and the off-vs-on gap at equal queue depth is the host
+overhead the ring hides. ``megabatch_tiles>1`` rows coalesce that many
+super-tiles per launch (the grid-over-queue path); every row also
+records per-request p50/p95 submit-to-finish latency, so megabatch
+coalescing can't silently trade tail latency for throughput.
+``devices>1`` rows (when the backend has them) shard each super-tile
+over a ("data",) mesh via dist.shard_batch.
 
 The section also measures dictionary swap latency: a whole-lexicon
 ``publish()`` vs a sorted-merge ``publish_delta()`` of a few keys
@@ -30,8 +34,45 @@ from repro.kernels import ops
 from repro.serve import DictStore, Engine, StemmerWorkload
 
 
+def _serve_once(arrays, enc, *, bb, depth, n_dev, mb, qd, words_per_request,
+                n_words):
+    """One full serve of the queue; returns (DrainReport, per-request
+    latency seconds).
+
+    Latency is submit-to-finish per request, measured by stepping the
+    engine manually (run_until_drained hides when each rid completes):
+    every request is submitted up front — a fully loaded queue, so tail
+    latency exposes what megabatch coalescing costs the first requests
+    that wait for a deep tile to fill.
+    """
+    store = DictStore(arrays)
+    eng = Engine(StemmerWorkload(
+        store, block_b=bb, max_inflight=depth, data_devices=n_dev,
+        megabatch_tiles=mb))
+    t_submit = {}
+    for i in range(qd):
+        rid = eng.submit(enc[i * words_per_request:
+                             (i + 1) * words_per_request])
+        t_submit[rid] = time.perf_counter()
+    latency = {}
+    max_ticks = max(1000, 2 * n_words // bb + 2)
+    ticks = 0
+    while (eng.queue or eng.workload.active) and ticks < max_ticks:
+        eng.step()
+        ticks += 1
+        now = time.perf_counter()
+        for rid in t_submit:
+            if rid not in latency and eng.result(rid) is not None:
+                latency[rid] = now - t_submit[rid]
+    assert len(latency) == qd, "serve did not drain"
+    from repro.serve.engine import DrainReport
+
+    return DrainReport(ticks=ticks, drained=True, pending=[]), \
+        sorted(latency.values())
+
+
 def _serve_rows(arrays, enc, *, queue_depths, block_bs, inflight_depths,
-                device_counts, words_per_request, iters):
+                device_counts, words_per_request, iters, megabatch_tiless):
     rows = []
     avail = len(jax.devices())
     for n_dev in device_counts:
@@ -45,43 +86,40 @@ def _serve_rows(arrays, enc, *, queue_depths, block_bs, inflight_depths,
             dt_raw, _ = _bench(ops.extract_roots_fused, ref, arrays,
                                block_b=bb, match="bsearch", dict_block_r=8,
                                warmup=1, iters=iters)
-            for depth in inflight_depths:
-                for qd in queue_depths:
-                    n_words = qd * words_per_request
-
-                    def serve_once():
-                        store = DictStore(arrays)
-                        eng = Engine(StemmerWorkload(
-                            store, block_b=bb, max_inflight=depth,
-                            data_devices=n_dev))
-                        for i in range(qd):
-                            eng.submit(enc[i * words_per_request:
-                                           (i + 1) * words_per_request])
-                        rep = eng.run_until_drained(
-                            max_ticks=max(1000, 2 * n_words // bb + 2))
-                        assert rep.drained
-                        return rep
-
-                    rep = serve_once()  # warmup: compile + jit-cache fill
-                    t0 = time.perf_counter()
-                    for _ in range(iters):
-                        rep = serve_once()
-                    dt = (time.perf_counter() - t0) / iters
-                    rows.append({
-                        "name": (f"serve_throughput_q{qd}_b{bb}"
-                                 f"_i{depth}_d{n_dev}"),
-                        "queue_depth": qd,
-                        "block_b": bb,
-                        "inflight": depth,
-                        "overlap": depth > 1,
-                        "devices": n_dev,
-                        "words_per_request": words_per_request,
-                        "n_words": n_words,
-                        "ticks": rep.ticks,
-                        "us_per_call": 1e6 * dt,
-                        "wps": n_words / dt,
-                        "raw_kernel_wps": bb / dt_raw,
-                    })
+            for mb in megabatch_tiless:
+                for depth in inflight_depths:
+                    for qd in queue_depths:
+                        n_words = qd * words_per_request
+                        kw = dict(bb=bb, depth=depth, n_dev=n_dev, mb=mb,
+                                  qd=qd, words_per_request=words_per_request,
+                                  n_words=n_words)
+                        # warmup: compile + jit-cache fill
+                        rep, lat = _serve_once(arrays, enc, **kw)
+                        t0 = time.perf_counter()
+                        for _ in range(iters):
+                            rep, lat = _serve_once(arrays, enc, **kw)
+                        dt = (time.perf_counter() - t0) / iters
+                        p50 = lat[len(lat) // 2]
+                        p95 = lat[min(len(lat) - 1,
+                                      int(0.95 * (len(lat) - 1) + 0.5))]
+                        rows.append({
+                            "name": (f"serve_throughput_q{qd}_b{bb}"
+                                     f"_i{depth}_d{n_dev}_m{mb}"),
+                            "queue_depth": qd,
+                            "block_b": bb,
+                            "inflight": depth,
+                            "overlap": depth > 1,
+                            "devices": n_dev,
+                            "megabatch_tiles": mb,
+                            "words_per_request": words_per_request,
+                            "n_words": n_words,
+                            "ticks": rep.ticks,
+                            "us_per_call": 1e6 * dt,
+                            "wps": n_words / dt,
+                            "latency_p50_us": 1e6 * p50,
+                            "latency_p95_us": 1e6 * p95,
+                            "raw_kernel_wps": bb / dt_raw,
+                        })
     return rows
 
 
@@ -143,7 +181,7 @@ def _swap_rows(arrays, *, swap_keys, iters):
 def run(queue_depths=(4, 16, 64), block_bs=(128, 256),
         words_per_request: int = 64, iters: int = 2,
         inflight_depths=(1, 2, 4), device_counts=(1,),
-        swap_keys: int = 32768):
+        megabatch_tiless=(1, 4), swap_keys: int = 32768):
     d = corpus.build_dictionary(n_tri=1000, n_quad=120, seed=0)
     arrays = stemmer.RootDictArrays.from_rootdict(d)
     words, _, _ = corpus.build_corpus(
@@ -153,7 +191,8 @@ def run(queue_depths=(4, 16, 64), block_bs=(128, 256),
     rows = _serve_rows(arrays, enc, queue_depths=queue_depths,
                        block_bs=block_bs, inflight_depths=inflight_depths,
                        device_counts=device_counts,
-                       words_per_request=words_per_request, iters=iters)
+                       words_per_request=words_per_request, iters=iters,
+                       megabatch_tiless=megabatch_tiless)
     rows += _swap_rows(arrays, swap_keys=swap_keys, iters=iters)
     return rows
 

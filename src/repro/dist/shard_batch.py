@@ -44,9 +44,10 @@ def mesh_axis_size(mesh, axis: str) -> int:
     jax.jit,
     static_argnames=("mesh", "axis", "infix", "match", "block_b",
                      "residency", "dict_block_r", "num_buffers",
-                     "skip_index", "interpret"))
+                     "skip_index", "visit_budget", "interpret"))
 def _shard_call(words, roots, *, mesh, axis, infix, match, block_b,
-                residency, dict_block_r, num_buffers, skip_index, interpret):
+                residency, dict_block_r, num_buffers, skip_index,
+                visit_budget, interpret):
     n_dev = mesh_axis_size(mesh, axis)
     b = words.shape[0]
     pad = (-b) % (n_dev * block_b)
@@ -57,7 +58,7 @@ def _shard_call(words, roots, *, mesh, axis, infix, match, block_b,
             w, r, infix=infix, match=match, block_b=block_b,
             residency=residency, dict_block_r=dict_block_r,
             num_buffers=num_buffers, skip_index=skip_index,
-            interpret=interpret)
+            visit_budget=visit_budget, interpret=interpret)
 
     f = shard_map(local, mesh=mesh, in_specs=(P(axis), P()),
                   out_specs=(P(axis), P(axis)), check_rep=False)
@@ -69,13 +70,18 @@ def shard_batch(words, roots, mesh, *, axis: str = "data",
                 infix: bool = True, match: str = "bsearch",
                 block_b: int = 256, residency: str = "auto",
                 dict_block_r: int = 8, num_buffers: int = 2,
-                skip_index: bool = True, interpret: bool = False):
+                skip_index: bool = True, visit_budget: int | None = None,
+                interpret: bool = False):
     """words int32[B,16] -> (root int32[B,4], source int32[B]), B split
     over ``mesh[axis]``.
 
-    Same contract as ``ops.extract_roots_fused``; ``roots`` accepts
-    plain RootDictArrays or a pre-resolved ``ResolvedRootDict`` handle
-    (the serving path — its pinned residency wins and its prebuilt tile
+    Same contract as ``ops.extract_roots_fused`` — including megabatches:
+    each device's shard runs the whole grid-over-queue batch axis over
+    its ``B / n_dev`` slice (chunked against ``visit_budget`` on the
+    streamed path), so one sharded launch retires
+    ``n_dev x megabatch_tiles`` queue tiles. ``roots`` accepts plain
+    RootDictArrays or a pre-resolved ``ResolvedRootDict`` handle (the
+    serving path — its pinned residency wins and its prebuilt tile
     stream replicates to every device, so hot swaps with matching shapes
     replay the cached trace). B is padded up to a multiple of
     ``n_dev * block_b`` and sliced back, so ragged final super-tiles are
@@ -87,4 +93,5 @@ def shard_batch(words, roots, mesh, *, axis: str = "data",
     return _shard_call(words, roots, mesh=mesh, axis=axis, infix=infix,
                        match=match, block_b=block_b, residency=residency,
                        dict_block_r=dict_block_r, num_buffers=num_buffers,
-                       skip_index=skip_index, interpret=interpret)
+                       skip_index=skip_index, visit_budget=visit_budget,
+                       interpret=interpret)

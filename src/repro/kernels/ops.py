@@ -24,6 +24,34 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# -- dispatch accounting -----------------------------------------------------
+# ``pallas_call`` dispatches issued through the extract_roots_* wrappers
+# since the last reset. A Python counter inside a jitted function would
+# only tick at trace time, so each wrapper adds what its configuration is
+# *known* to launch (stem_fused.planned_launches mirrors the kernel's
+# chunking exactly). The launch_overhead benchmark and the megabatch
+# launch-count tests read this.
+_dispatches = 0
+
+
+def reset_dispatch_count() -> None:
+    """Zero the pallas_call dispatch counter."""
+    global _dispatches
+    _dispatches = 0
+
+
+def dispatch_count() -> int:
+    """pallas_call dispatches issued through extract_roots_fused /
+    extract_roots_persistent / extract_roots_sharded since the last
+    :func:`reset_dispatch_count`."""
+    return _dispatches
+
+
+def _count_dispatches(n: int) -> None:
+    global _dispatches
+    _dispatches += n
+
+
 def dict_match(keys: jnp.ndarray, dict_keys: jnp.ndarray, *,
                strategy: str = "bank", **kw) -> jnp.ndarray:
     """Membership of packed stem keys in a packed root dictionary.
@@ -61,10 +89,12 @@ def extract_roots_fused(words, roots, *, infix: bool = True,
                         match: str = "bsearch", block_b: int = 256,
                         residency: str = "auto", dict_block_r: int = 8,
                         num_buffers: int = 2, skip_index: bool = True,
+                        visit_budget: int | None = None,
                         interpret: bool | None = None):
-    """Single-launch megakernel: all five stages in ONE pallas_call
-    (stem_fused.py). Same contract as repro.core.stemmer.extract_roots;
-    bit-identical output.
+    """Megabatch megakernel: all five stages, the grid's batch axis
+    spanning every [block_b, 16] tile of the (arbitrarily deep) batch, in
+    ONE pallas_call (stem_fused.py). Same contract as
+    repro.core.stemmer.extract_roots; bit-identical output.
 
     residency: "resident" keeps the packed dictionaries in VMEM across
     the batch sweep, "streamed" sweeps a scalar-prefetched visit list of
@@ -72,7 +102,11 @@ def extract_roots_fused(words, roots, *, infix: bool = True,
     ``num_buffers``-deep DMA ladder (unbounded dictionary size; with
     ``skip_index`` only tiles a live candidate key can land in are
     visited), "auto" (default) streams only past
-    stem_fused.MAX_RESIDENT_KEYS.
+    stem_fused.MAX_RESIDENT_KEYS. Streamed megabatches whose
+    scalar-prefetch visit table would exceed ``visit_budget`` (default
+    stem_fused.VISIT_SMEM_BUDGET int32 entries) chunk along the batch
+    axis into several pallas_calls — ``dispatch_count()`` reflects the
+    actual launch count either way.
 
     roots accepts plain RootDictArrays or a pre-resolved
     core.stemmer.ResolvedRootDict handle (serving path): the handle's
@@ -82,11 +116,46 @@ def extract_roots_fused(words, roots, *, infix: bool = True,
     """
     if interpret is None:
         interpret = _interpret_default()
+    _count_dispatches(sf.planned_launches(
+        words.shape[0], roots, infix=infix, block_b=block_b,
+        residency=residency, dict_block_r=dict_block_r,
+        visit_budget=visit_budget))
     return sf.stem_fused_pallas(words, roots, infix=infix, match=match,
                                 block_b=block_b, residency=residency,
                                 dict_block_r=dict_block_r,
                                 num_buffers=num_buffers,
                                 skip_index=skip_index,
+                                visit_budget=visit_budget,
+                                interpret=interpret)
+
+
+def extract_roots_persistent(words, roots, *, infix: bool = True,
+                             match: str = "bsearch", block_b: int = 256,
+                             residency: str = "auto", dict_block_r: int = 8,
+                             num_buffers: int = 2, skip_index: bool = True,
+                             version_slot=0, visit_budget: int | None = None,
+                             interpret: bool | None = None):
+    """Persistent serving kernel: ONE launch whose body fori_loops over a
+    scalar-prefetched work-descriptor ring of batch tiles, DMA-ing word
+    tiles in and (root, source) tiles out (stem_fused.py,
+    ``persistent=True``). Returns ``(root, source, flags)`` — flags
+    int32[batch_tiles] is ``1 + version_slot`` per retired descriptor,
+    the completion word the serving ring polls. Roots/sources are
+    bit-identical to :func:`extract_roots_fused`.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    _count_dispatches(sf.planned_launches(
+        words.shape[0], roots, infix=infix, block_b=block_b,
+        residency=residency, dict_block_r=dict_block_r, persistent=True,
+        visit_budget=visit_budget))
+    return sf.stem_fused_pallas(words, roots, infix=infix, match=match,
+                                block_b=block_b, residency=residency,
+                                dict_block_r=dict_block_r,
+                                num_buffers=num_buffers,
+                                skip_index=skip_index, persistent=True,
+                                version_slot=version_slot,
+                                visit_budget=visit_budget,
                                 interpret=interpret)
 
 
@@ -95,22 +164,29 @@ def extract_roots_sharded(words, roots, mesh, *, axis: str = "data",
                           block_b: int = 256, residency: str = "auto",
                           dict_block_r: int = 8, num_buffers: int = 2,
                           skip_index: bool = True,
+                          visit_budget: int | None = None,
                           interpret: bool | None = None):
-    """Megakernel launch data-sharded over ``mesh[axis]``: the batch is
-    split into per-device [block_b, 16] tiles (one super-tile of
-    ``n_dev * block_b`` words per launch at full occupancy), the packed
+    """Megakernel launch data-sharded over ``mesh[axis]``: the batch —
+    including a multi-tile megabatch — is split into per-device shards
+    whose grid spans every local [block_b, 16] tile, the packed
     dictionaries replicated. Same contract as :func:`extract_roots_fused`
     — bit-identical, ragged batches padded and sliced back. This is the
     serving path behind ``StemmerWorkload(data_devices=N)``.
     """
-    from repro.dist import shard_batch  # lazy: dist builds on kernels
+    from repro.dist import mesh_axis_size, shard_batch  # lazy
 
     if interpret is None:
         interpret = _interpret_default()
+    n_dev = mesh_axis_size(mesh, axis)
+    per_dev = -(-words.shape[0] // n_dev) if words.shape[0] else 0
+    _count_dispatches(n_dev * sf.planned_launches(
+        per_dev, roots, infix=infix, block_b=block_b, residency=residency,
+        dict_block_r=dict_block_r, visit_budget=visit_budget))
     return shard_batch(words, roots, mesh, axis=axis, infix=infix,
                        match=match, block_b=block_b, residency=residency,
                        dict_block_r=dict_block_r, num_buffers=num_buffers,
-                       skip_index=skip_index, interpret=interpret)
+                       skip_index=skip_index, visit_budget=visit_budget,
+                       interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("infix", "interpret"))

@@ -87,6 +87,13 @@ MAX_RESIDENT_KEYS = 1 << 16
 RESIDENCIES = ("resident", "streamed", "auto")
 MAX_NUM_BUFFERS = 4
 _KEY_NOWHERE = jnp.iinfo(jnp.int32).min  # lands in no tile: below every min
+# Scalar-prefetch budget for the streamed tile-visit table, in int32
+# entries (the table is [batch_tiles, n_dict_tiles]). A megabatch whose
+# table would exceed this is chunked along the batch axis into several
+# pallas_calls, each with a within-budget table — so grid-over-queue
+# megabatches can grow without outgrowing SMEM (the PR 5 open edge).
+# 16K entries = 64 KB of scalar memory.
+VISIT_SMEM_BUDGET = 1 << 14
 
 
 def _loaded_keys(roots, infix: bool) -> int:
@@ -136,27 +143,34 @@ def _priority_select(keys, hits_i, root_ref, src_ref, *, n_groups: int):
     src_ref[...] = source[:, None]
 
 
-def _fused_kernel(words_ref, tri_ref, quad_ref, bi_ref, root_ref, src_ref,
-                  *, n_groups: int, match: str):
-    w = words_ref[...]                             # (bb, 16) int32
-    key_cols, val_cols = sdp.candidate_columns(w)  # stages 1-4, 30 columns
+def _candidates(w, n_groups: int):
+    """Stages 1-4 on one word tile -> (keys[bb, n_slots], valid[bb, n_slots])."""
+    key_cols, val_cols = sdp.candidate_columns(w)
     n_slots = n_groups * N_CAND
-    keys = jnp.stack(key_cols[:n_slots], axis=1)   # (bb, n_slots)
+    keys = jnp.stack(key_cols[:n_slots], axis=1)
     valid = jnp.stack(val_cols[:n_slots], axis=1) > 0
+    return keys, valid
 
-    dicts = {"tri": tri_ref[...].reshape(-1),
-             "quad": quad_ref[...].reshape(-1),
-             "bi": bi_ref[...].reshape(-1)}
 
-    # ---- stage 5a: Compare — per-group match against the resident dict ---
+def _resident_hits(keys, valid, dicts, *, n_groups: int, match: str):
+    """Stage 5a against VMEM-resident dictionaries -> bool[bb, n_slots]."""
     hit_cols = []
     for g in range(n_groups):
         kg = keys[:, g * N_CAND : (g + 1) * N_CAND]
         d = dicts[GROUP_DICTS[g]]
         hit_cols.append(sm.bsearch_hit(d, kg) if match == "bsearch"
                         else _bank_hit(d, kg))
-    hits = jnp.concatenate(hit_cols, axis=1) & valid   # (bb, n_slots)
+    return jnp.concatenate(hit_cols, axis=1) & valid
 
+
+def _fused_kernel(words_ref, tri_ref, quad_ref, bi_ref, root_ref, src_ref,
+                  *, n_groups: int, match: str):
+    keys, valid = _candidates(words_ref[...], n_groups)  # stages 1-4
+    dicts = {"tri": tri_ref[...].reshape(-1),
+             "quad": quad_ref[...].reshape(-1),
+             "bi": bi_ref[...].reshape(-1)}
+    # ---- stage 5a: Compare — per-group match against the resident dict ---
+    hits = _resident_hits(keys, valid, dicts, n_groups=n_groups, match=match)
     # ---- stage 5b ----
     _priority_select(keys, hits.astype(jnp.int32), root_ref, src_ref,
                      n_groups=n_groups)
@@ -225,36 +239,28 @@ def _visit_tables(keys, valid, tiles: sm.DictTileSet, *, n_groups: int,
     return n_visits, visit_idx
 
 
-def _fused_pipeline_kernel(nvis_ref, vis_ref, words_ref, dict_ref,
-                           root_ref, src_ref, dict_bufs, hits_sc, dma_sems,
-                           *, n_groups: int, match: str, num_buffers: int,
-                           dict_block_r: int, tri_tiles: int,
-                           quad_tiles: int):
-    """Streamed Compare: grid (batch_tiles,), explicit DMA ladder inside.
+def _ladder_sweep(n, vis_at, keys, valid, dict_ref, dict_bufs, hits_sc,
+                  dma_sems, *, n_groups: int, match: str, num_buffers: int,
+                  dict_block_r: int, tri_tiles: int, quad_tiles: int):
+    """Stage 5a over a visit list of HBM dictionary tiles: the rotating
+    ``num_buffers``-deep make_async_copy ladder, OR-accumulating hits
+    into ``hits_sc``; returns the final hit mask int32[bb, n_slots].
 
-    The dictionary stream stays in HBM (memory_space=ANY); the kernel
-    walks this batch tile's visit list (scalar-prefetched ``vis_ref``,
-    ``nvis_ref[i]`` entries) and drives a ``num_buffers``-deep rotating
-    make_async_copy ladder: the copy for visit k + num_buffers - 1 is
-    issued before visit k's compare runs, so tile DMA overlaps the
-    bsearch/bank compute with a tunable lookahead (num_buffers=1 is the
-    no-overlap baseline). Which dictionary a tile feeds is a static
-    boundary compare on its *global tile id* (not the loop index — the
-    visit list has holes where tiles were skipped). Each tile is
-    internally sorted, so its first/last element still gives the fine
-    [min, max] reject below the pre-pass' coarse one.
+    ``vis_at(k)`` resolves visit ``k`` (of ``n``) to a *global tile id*
+    — the grid kernel reads its batch tile's scalar-prefetched row, the
+    persistent kernel its descriptor's. The copy for visit
+    k + num_buffers - 1 is issued before visit k's compare runs, so
+    tile DMA overlaps the bsearch/bank compute with a tunable lookahead
+    (num_buffers=1 is the no-overlap baseline). Which dictionary a tile
+    feeds is a static boundary compare on its global tile id (not the
+    loop index — the visit list has holes where tiles were skipped).
+    Each tile is internally sorted, so its first/last element still
+    gives the fine [min, max] reject below the pre-pass' coarse one.
     """
-    i = pl.program_id(0)
-    n = nvis_ref[i]
-    n_slots = n_groups * N_CAND
-    w = words_ref[...]                             # (bb, 16) int32
-    key_cols, val_cols = sdp.candidate_columns(w)  # stages 1-4
-    keys = jnp.stack(key_cols[:n_slots], axis=1)
-    valid = jnp.stack(val_cols[:n_slots], axis=1) > 0
     hits_sc[...] = jnp.zeros_like(hits_sc)
 
     def tile_dma(k, slot):
-        t = vis_ref[i, k]
+        t = vis_at(k)
         return pltpu.make_async_copy(
             dict_ref.at[pl.ds(t * dict_block_r, dict_block_r), :],
             dict_bufs.at[slot], dma_sems.at[slot])
@@ -271,7 +277,7 @@ def _fused_pipeline_kernel(nvis_ref, vis_ref, words_ref, dict_ref,
             tile_dma(look, jax.lax.rem(look, num_buffers)).start()
         slot = jax.lax.rem(k, num_buffers)
         tile_dma(k, slot).wait()
-        tile_id = vis_ref[i, k]
+        tile_id = vis_at(k)
         tile = dict_bufs[slot].reshape(-1)         # (dict_block_r * LANE,)
 
         # which dictionary holds this tile? static boundaries on tile_id
@@ -300,14 +306,132 @@ def _fused_pipeline_kernel(nvis_ref, vis_ref, words_ref, dict_ref,
         return carry
 
     jax.lax.fori_loop(0, n, visit, 0)
-    _priority_select(keys, hits_sc[...], root_ref, src_ref,
+    return hits_sc[...]
+
+
+def _fused_pipeline_kernel(nvis_ref, vis_ref, words_ref, dict_ref,
+                           root_ref, src_ref, dict_bufs, hits_sc, dma_sems,
+                           *, n_groups: int, match: str, num_buffers: int,
+                           dict_block_r: int, tri_tiles: int,
+                           quad_tiles: int):
+    """Streamed Compare: grid (batch_tiles,), explicit DMA ladder inside.
+
+    The dictionary stream stays in HBM (memory_space=ANY); the kernel
+    walks this batch tile's visit list (scalar-prefetched ``vis_ref``,
+    ``nvis_ref[i]`` entries) through :func:`_ladder_sweep`.
+    """
+    i = pl.program_id(0)
+    keys, valid = _candidates(words_ref[...], n_groups)  # stages 1-4
+    hits = _ladder_sweep(
+        nvis_ref[i], lambda k: vis_ref[i, k], keys, valid, dict_ref,
+        dict_bufs, hits_sc, dma_sems, n_groups=n_groups, match=match,
+        num_buffers=num_buffers, dict_block_r=dict_block_r,
+        tri_tiles=tri_tiles, quad_tiles=quad_tiles)
+    _priority_select(keys, hits, root_ref, src_ref,
                      n_groups=n_groups)            # stage 5b
+
+
+def _persistent_io(desc_ref, d, words_hbm, words_vm, io_sems, block_b):
+    """Pull descriptor ``d``'s word tile from HBM into VMEM; returns its
+    row offset (descriptor field 0, not the loop index — the ring is
+    addressed through its metadata, so tiles can live anywhere in the
+    queue buffer)."""
+    off = desc_ref[d, 0]
+    cp = pltpu.make_async_copy(words_hbm.at[pl.ds(off, block_b), :],
+                               words_vm, io_sems.at[0])
+    cp.start()
+    cp.wait()
+    return off
+
+
+def _persistent_retire(d, off, desc_ref, root_vm, src_vm, root_hbm, src_hbm,
+                       flags_ref, io_sems, block_b):
+    """Push descriptor ``d``'s finished (root, source) tiles back to HBM
+    and mark its completion flag: 1 + the descriptor's version slot, so
+    the host-side retire can assert every tile completed under the dict
+    version pinned at dispatch (0 = never processed)."""
+    cp_r = pltpu.make_async_copy(
+        root_vm, root_hbm.at[pl.ds(off, block_b), :], io_sems.at[1])
+    cp_s = pltpu.make_async_copy(
+        src_vm, src_hbm.at[pl.ds(off, block_b), :], io_sems.at[2])
+    cp_r.start()
+    cp_s.start()
+    cp_r.wait()
+    cp_s.wait()
+    flags_ref[d] = 1 + desc_ref[d, 2]
+
+
+def _persistent_streamed_kernel(desc_ref, vis_ref, words_hbm, dict_ref,
+                                root_hbm, src_hbm, flags_ref, words_vm,
+                                root_vm, src_vm, dict_bufs, hits_sc,
+                                dma_sems, io_sems, *, n_groups: int,
+                                match: str, num_buffers: int,
+                                dict_block_r: int, tri_tiles: int,
+                                quad_tiles: int, block_b: int, n_desc: int):
+    """The persistent serving kernel, streamed Compare: ONE launch
+    (grid=(1,)) fori_loops over a scalar-prefetched work-descriptor ring
+    instead of paying one grid step — or worse, one ``pallas_call`` — per
+    batch tile.
+
+    Each descriptor is SMEM metadata ``(row offset, n_visits, version
+    slot)``; its word tile is DMA'd from the HBM queue buffer, stages
+    1-4 run in VMEM, stage 5a reuses the exact :func:`_ladder_sweep` DMA
+    ladder over the descriptor's visit row, and the (root, source) tiles
+    DMA back to HBM outputs. A per-descriptor completion flag
+    (``1 + version slot``) lands in an SMEM output the host polls — the
+    retire side of the serving ring keeps its non-blocking ``is_ready``
+    contract unchanged.
+    """
+    def tile(d, carry):
+        off = _persistent_io(desc_ref, d, words_hbm, words_vm, io_sems,
+                             block_b)
+        keys, valid = _candidates(words_vm[...], n_groups)   # stages 1-4
+        hits = _ladder_sweep(                                # stage 5a
+            desc_ref[d, 1], lambda k: vis_ref[d, k], keys, valid, dict_ref,
+            dict_bufs, hits_sc, dma_sems, n_groups=n_groups, match=match,
+            num_buffers=num_buffers, dict_block_r=dict_block_r,
+            tri_tiles=tri_tiles, quad_tiles=quad_tiles)
+        _priority_select(keys, hits, root_vm, src_vm,        # stage 5b
+                         n_groups=n_groups)
+        _persistent_retire(d, off, desc_ref, root_vm, src_vm, root_hbm,
+                           src_hbm, flags_ref, io_sems, block_b)
+        return carry
+
+    jax.lax.fori_loop(0, n_desc, tile, 0)
+
+
+def _persistent_resident_kernel(desc_ref, words_hbm, tri_ref, quad_ref,
+                                bi_ref, root_hbm, src_hbm, flags_ref,
+                                words_vm, root_vm, src_vm, io_sems, *,
+                                n_groups: int, match: str, block_b: int,
+                                n_desc: int):
+    """Persistent serving kernel, resident Compare: the packed
+    dictionaries sit in VMEM for the whole launch while the descriptor
+    loop streams word tiles through; same descriptor/flag contract as
+    the streamed variant."""
+    dicts = {"tri": tri_ref[...].reshape(-1),
+             "quad": quad_ref[...].reshape(-1),
+             "bi": bi_ref[...].reshape(-1)}
+
+    def tile(d, carry):
+        off = _persistent_io(desc_ref, d, words_hbm, words_vm, io_sems,
+                             block_b)
+        keys, valid = _candidates(words_vm[...], n_groups)   # stages 1-4
+        hits = _resident_hits(keys, valid, dicts, n_groups=n_groups,
+                              match=match)                   # stage 5a
+        _priority_select(keys, hits.astype(jnp.int32), root_vm, src_vm,
+                         n_groups=n_groups)                  # stage 5b
+        _persistent_retire(d, off, desc_ref, root_vm, src_vm, root_hbm,
+                           src_hbm, flags_ref, io_sems, block_b)
+        return carry
+
+    jax.lax.fori_loop(0, n_desc, tile, 0)
 
 
 @functools.partial(
     jax.jit, static_argnames=("infix", "match", "block_b", "residency",
                               "dict_block_r", "num_buffers", "skip_index",
-                              "interpret"))
+                              "persistent", "visit_budget", "interpret"))
 def stem_fused_pallas(
     words: jnp.ndarray,
     roots,
@@ -319,12 +443,16 @@ def stem_fused_pallas(
     dict_block_r: int = 8,
     num_buffers: int = 2,
     skip_index: bool = True,
+    persistent: bool = False,
+    version_slot=0,
+    visit_budget: int | None = None,
     interpret: bool = False,
 ):
     """words int32[B,16] + RootDictArrays -> (root int32[B,4], source int32[B]).
 
-    Single ``pallas_call`` either way; ``residency`` picks the dictionary
-    layout (DESIGN.md §5.3):
+    The grid's batch axis spans every ``block_b`` tile of the batch, so
+    one launch retires an arbitrarily deep queue megabatch; ``residency``
+    picks the dictionary layout (DESIGN.md §5.3):
 
       "resident"  grid = batch tiles only; the packed dictionaries ride
                   along as constant-index-map VMEM blocks. Raises past
@@ -334,14 +462,25 @@ def stem_fused_pallas(
                   dictionary tiles, DMA'd from HBM through a
                   ``num_buffers``-deep explicit ladder; with
                   ``skip_index`` only the tiles a candidate key can land
-                  in are visited at all. The visit table itself costs
+                  in are visited at all. The visit table costs
                   ``batch_tiles x n_tiles`` int32 of scalar-prefetch
-                  (SMEM) space — 256K keys at dict_block_r=8 with 32
-                  batch tiles is ~33 KB; very large batch x dictionary
-                  products should raise dict_block_r (or chunk the
-                  batch, as serving's fixed super-tiles already do) to
-                  stay inside scalar memory on real hardware.
+                  (SMEM) space; megabatches whose table would exceed
+                  ``visit_budget`` (default VISIT_SMEM_BUDGET) are
+                  chunked along the batch axis into several
+                  pallas_calls, each with a within-budget table.
       "auto"      resident while the dictionaries fit, streamed beyond.
+
+    ``persistent=True`` selects the persistent serving kernel: ONE
+    launch (grid=(1,)) whose body fori_loops over a device-side
+    work-descriptor ring — scalar-prefetched ``(row offset, n_visits,
+    version slot)`` tuples in SMEM — DMA-ing each word tile in, running
+    the full five-stage pipeline (the streamed variant reuses the exact
+    DMA ladder), and DMA-ing (root, source) back out. The return value
+    grows a third element: per-descriptor completion ``flags``
+    int32[batch_tiles], ``1 + version_slot`` once a tile retires (0 =
+    never processed), which the serving ring polls at retire.
+    ``version_slot`` (traced, so hot swaps never re-trace) stamps the
+    flags with the dictionary version pinned at dispatch.
 
     ``num_buffers`` (1..4; streamed only) sets the DMA lookahead depth —
     2 double-buffers, 1 is the no-overlap baseline. ``skip_index=False``
@@ -349,7 +488,7 @@ def stem_fused_pallas(
     loaded dictionaries through the same ladder.
 
     Bit-identical to ``core.stemmer.extract_roots`` (and pyref) in every
-    (residency, match, num_buffers, skip_index) combination.
+    (residency, match, num_buffers, skip_index, persistent) combination.
 
     ``roots`` also accepts a ``core.stemmer.ResolvedRootDict`` handle:
     its pinned residency replaces the residency argument, and a handle
@@ -376,10 +515,12 @@ def stem_fused_pallas(
 
     b = words.shape[0]
     if b == 0:  # degenerate batch: nothing to launch
-        return (jnp.zeros((0, 4), jnp.int32), jnp.zeros((0,), jnp.int32))
+        empty = (jnp.zeros((0, 4), jnp.int32), jnp.zeros((0,), jnp.int32))
+        return empty + (jnp.zeros((0,), jnp.int32),) if persistent else empty
     pad = (-b) % block_b
     wp = jnp.pad(words, ((0, pad), (0, 0)))
     bp = wp.shape[0]
+    bt = bp // block_b
 
     word_spec = pl.BlockSpec((block_b, ab.MAXLEN), lambda i, *a: (i, 0))
     out_specs = [pl.BlockSpec((block_b, 4), lambda i, *a: (i, 0)),
@@ -393,10 +534,15 @@ def stem_fused_pallas(
         # so the unused table doesn't occupy VMEM (see choose_residency)
         bi = roots.bi if infix else jnp.full((1,), sm.DICT_PAD, jnp.int32)
         tri2, quad2, bi2 = prep(roots.tri), prep(roots.quad), prep(bi)
-        dict_spec = lambda d: pl.BlockSpec(d.shape, lambda i: (0, 0))
+        dict_spec = lambda d: pl.BlockSpec(d.shape, lambda i, *a: (0, 0))
+        if persistent:
+            return _persistent_resident_call(
+                wp, (tri2, quad2, bi2), dict_spec, version_slot, b=b,
+                block_b=block_b, n_groups=n_groups, match=match,
+                interpret=interpret)
         root, source = pl.pallas_call(
             functools.partial(_fused_kernel, n_groups=n_groups, match=match),
-            grid=(bp // block_b,),
+            grid=(bt,),
             in_specs=[word_spec,
                       dict_spec(tri2), dict_spec(quad2), dict_spec(bi2)],
             out_specs=out_specs,
@@ -419,28 +565,173 @@ def stem_fused_pallas(
         jnp.stack(kc[:n_slots], axis=1), jnp.stack(vc[:n_slots], axis=1) > 0,
         tiles, n_groups=n_groups, block_b=block_b, skip_index=skip_index)
 
+    # chunk the scalar-prefetch table along the batch axis: each chunk's
+    # [chunk_bt, n_tiles] table stays inside the SMEM budget (megabatches
+    # otherwise grow it without bound — the PR 5 open edge)
+    budget = VISIT_SMEM_BUDGET if visit_budget is None else visit_budget
+    max_bt = max(1, budget // tiles.n_tiles)
+    kern_args = dict(n_groups=n_groups, match=match, num_buffers=num_buffers,
+                     dict_block_r=dict_block_r, tri_tiles=tri_tiles,
+                     quad_tiles=quad_tiles)
+    roots_out, srcs_out, flags_out = [], [], []
+    for c0 in range(0, bt, max_bt):
+        c1 = min(bt, c0 + max_bt)
+        cw = slice(c0 * block_b, c1 * block_b)
+        if persistent:
+            r, s, f = _persistent_streamed_call(
+                wp[cw], tiles.stream, n_visits[c0:c1], visit_idx[c0:c1],
+                version_slot, block_b=block_b, n_slots=n_slots,
+                interpret=interpret, **kern_args)
+            flags_out.append(f)
+        else:
+            grid_spec = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,      # (n_visits, visit_idx) -> SMEM
+                grid=(c1 - c0,),
+                in_specs=[word_spec,
+                          pl.BlockSpec(memory_space=pltpu.ANY)],  # dict: HBM
+                out_specs=out_specs,
+                scratch_shapes=[
+                    pltpu.VMEM((num_buffers, dict_block_r, sm.LANE),
+                               jnp.int32),
+                    pltpu.VMEM((block_b, n_slots), jnp.int32),
+                    pltpu.SemaphoreType.DMA((num_buffers,)),
+                ],
+            )
+            r, s = pl.pallas_call(
+                functools.partial(_fused_pipeline_kernel, **kern_args),
+                grid_spec=grid_spec,
+                out_shape=[
+                    jax.ShapeDtypeStruct(((c1 - c0) * block_b, 4), jnp.int32),
+                    jax.ShapeDtypeStruct(((c1 - c0) * block_b, 1), jnp.int32),
+                ],
+                interpret=interpret,
+            )(n_visits[c0:c1], visit_idx[c0:c1], wp[cw], tiles.stream)
+        roots_out.append(r)
+        srcs_out.append(s)
+    root = roots_out[0] if len(roots_out) == 1 else jnp.concatenate(roots_out)
+    source = srcs_out[0] if len(srcs_out) == 1 else jnp.concatenate(srcs_out)
+    if persistent:
+        flags = (flags_out[0] if len(flags_out) == 1
+                 else jnp.concatenate(flags_out))
+        return root[:b], source[:b, 0], flags
+    return root[:b], source[:b, 0]
+
+
+def _descriptors(bt: int, block_b: int, n_visits, version_slot):
+    """Pack the work-descriptor ring: int32[bt, 3] of (row offset,
+    n_visits, version slot) per tile, delivered via scalar prefetch."""
+    ver = jnp.broadcast_to(jnp.asarray(version_slot, jnp.int32), (bt,))
+    offs = jnp.arange(bt, dtype=jnp.int32) * block_b
+    return jnp.stack([offs, n_visits.astype(jnp.int32), ver], axis=1)
+
+
+def _persistent_resident_call(wp, dicts, dict_spec, version_slot, *, b: int,
+                              block_b: int, n_groups: int, match: str,
+                              interpret: bool):
+    bp = wp.shape[0]
+    bt = bp // block_b
+    desc = _descriptors(bt, block_b, jnp.zeros(bt, jnp.int32), version_slot)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,          # (n_visits, visit_idx) -> SMEM
-        grid=(bp // block_b,),
-        in_specs=[word_spec,
-                  pl.BlockSpec(memory_space=pltpu.ANY)],  # dict stays in HBM
-        out_specs=out_specs,
+        num_scalar_prefetch=1,              # descriptor ring -> SMEM
+        grid=(1,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] + [
+            dict_spec(d) for d in dicts],
+        out_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                   pl.BlockSpec(memory_space=pltpu.ANY),
+                   pl.BlockSpec(memory_space=pltpu.SMEM)],
         scratch_shapes=[
+            pltpu.VMEM((block_b, ab.MAXLEN), jnp.int32),
+            pltpu.VMEM((block_b, 4), jnp.int32),
+            pltpu.VMEM((block_b, 1), jnp.int32),
+            pltpu.SemaphoreType.DMA((3,)),
+        ],
+    )
+    root, source, flags = pl.pallas_call(
+        functools.partial(_persistent_resident_kernel, n_groups=n_groups,
+                          match=match, block_b=block_b, n_desc=bt),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((bp, 4), jnp.int32),
+                   jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((bt,), jnp.int32)],
+        interpret=interpret,
+    )(desc, wp, *dicts)
+    return root[:b], source[:b, 0], flags
+
+
+def _persistent_streamed_call(wp, stream, n_visits, visit_idx, version_slot,
+                              *, block_b: int, n_slots: int, n_groups: int,
+                              match: str, num_buffers: int, dict_block_r: int,
+                              tri_tiles: int, quad_tiles: int,
+                              interpret: bool):
+    bp = wp.shape[0]
+    bt = bp // block_b
+    desc = _descriptors(bt, block_b, n_visits, version_slot)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # (descriptors, visit rows)
+        grid=(1,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),   # word queue: HBM
+                  pl.BlockSpec(memory_space=pltpu.ANY)],  # dict: HBM
+        out_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                   pl.BlockSpec(memory_space=pltpu.ANY),
+                   pl.BlockSpec(memory_space=pltpu.SMEM)],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, ab.MAXLEN), jnp.int32),
+            pltpu.VMEM((block_b, 4), jnp.int32),
+            pltpu.VMEM((block_b, 1), jnp.int32),
             pltpu.VMEM((num_buffers, dict_block_r, sm.LANE), jnp.int32),
             pltpu.VMEM((block_b, n_slots), jnp.int32),
             pltpu.SemaphoreType.DMA((num_buffers,)),
+            pltpu.SemaphoreType.DMA((3,)),
         ],
     )
-    root, source = pl.pallas_call(
-        functools.partial(_fused_pipeline_kernel, n_groups=n_groups,
+    return pl.pallas_call(
+        functools.partial(_persistent_streamed_kernel, n_groups=n_groups,
                           match=match, num_buffers=num_buffers,
                           dict_block_r=dict_block_r, tri_tiles=tri_tiles,
-                          quad_tiles=quad_tiles),
+                          quad_tiles=quad_tiles, block_b=block_b, n_desc=bt),
         grid_spec=grid_spec,
-        out_shape=out_shape,
+        out_shape=[jax.ShapeDtypeStruct((bp, 4), jnp.int32),
+                   jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((bt,), jnp.int32)],
         interpret=interpret,
-    )(n_visits, visit_idx, wp, tiles.stream)
-    return root[:b], source[:b, 0]
+    )(desc, visit_idx, wp, stream)
+
+
+def dict_tile_count(roots, dict_block_r: int) -> int:
+    """Tiles in the streamed `[tri | quad | bi]` stream (mirrors
+    stem_match.pad_dict_tiles: every table pads to >= one full tile)."""
+    per = dict_block_r * sm.LANE
+    return sum(max(1, -(-int(t.shape[0]) // per))
+               for t in (roots.tri, roots.quad, roots.bi))
+
+
+def planned_launches(n_words: int, roots, *, infix: bool = True,
+                     block_b: int = 256, residency: str = "auto",
+                     dict_block_r: int = 8, persistent: bool = False,
+                     visit_budget: int | None = None) -> int:
+    """``pallas_call`` dispatches one :func:`stem_fused_pallas` invocation
+    issues for this configuration — the launch accounting behind
+    ``ops.dispatch_count()`` and the ``launch_overhead`` benchmark.
+
+    Resident launches are always 1; streamed (and persistent-streamed)
+    launches are ceil(batch_tiles / chunk) where chunk is the largest
+    batch-tile count whose scalar-prefetch visit table fits the SMEM
+    budget.
+    """
+    roots, residency, tiles = core_stemmer.unwrap_dict(roots, residency)
+    residency = choose_residency(roots, residency, infix=infix)
+    if n_words == 0:
+        return 0
+    if residency == "resident":
+        return 1
+    if tiles is not None and tiles.dict_block_r == dict_block_r:
+        n_tiles = tiles.n_tiles
+    else:
+        n_tiles = dict_tile_count(roots, dict_block_r)
+    budget = VISIT_SMEM_BUDGET if visit_budget is None else visit_budget
+    max_bt = max(1, budget // n_tiles)
+    bt = -(-n_words // block_b)
+    return -(-bt // max_bt)
 
 
 def tile_visit_stats(words, roots, *, infix: bool = True, block_b: int = 256,

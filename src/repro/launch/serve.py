@@ -67,7 +67,9 @@ def serve_stemmer(args) -> None:
                                  num_buffers=args.num_buffers,
                                  skip_index=not args.full_sweep,
                                  max_inflight=args.inflight,
-                                 data_devices=args.devices))
+                                 data_devices=args.devices,
+                                 megabatch_tiles=args.megabatch,
+                                 persistent=args.persistent))
 
     wpr = args.words_per_request
     words, _, _ = corpus.build_corpus(n_words=args.requests * wpr, seed=1)
@@ -83,6 +85,8 @@ def serve_stemmer(args) -> None:
           f"{dt:.2f}s ({n_words / dt:.1f} Wps, {rep.ticks} ticks, "
           f"{eng.workload.ticks_launched} launches, dict v{store.version}, "
           f"super-tile {args.devices}x{args.block_b}, "
+          f"megabatch {args.megabatch}"
+          f"{', persistent' if args.persistent else ''}, "
           f"inflight {args.inflight})")
     for rid in rids[:2]:
         req = eng.result(rid)
@@ -121,6 +125,15 @@ def main():
     ap.add_argument("--full-sweep", action="store_true",
                     help="disable the tile-visit skip index (sweep every"
                          " dictionary tile; the skip-off baseline)")
+    ap.add_argument("--megabatch", type=int, default=1,
+                    help="super-tiles coalesced per launch: the grid's"
+                         " batch axis spans the whole megabatch, so one"
+                         " dispatch retires up to this many queue tiles"
+                         " (1 = the per-tile baseline)")
+    ap.add_argument("--persistent", action="store_true",
+                    help="persistent serving kernel: ONE launch loops a"
+                         " device-side work-descriptor ring over the"
+                         " megabatch (single-device only)")
     args = ap.parse_args()
 
     if args.workload == "stemmer":

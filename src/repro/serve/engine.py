@@ -12,10 +12,14 @@ workload has capacity, the finished table, and drain accounting. What a
                      immediately. Bit-identical to the pre-refactor
                      ServeEngine (which remains as a facade).
   StemmerWorkload    the paper's workload behind the same machinery:
-                     queued word-batch requests coalesce into fixed
-                     [data_devices * block_b, 16] super-tiles, each ONE
-                     megakernel launch (ops.extract_roots_fused, or
-                     ops.extract_roots_sharded across a data mesh). A
+                     queued word-batch requests coalesce into megabatches
+                     of up to ``megabatch_tiles`` [data_devices *
+                     block_b, 16] super-tiles, each megabatch ONE
+                     megakernel launch whose grid spans every coalesced
+                     tile (ops.extract_roots_fused,
+                     ops.extract_roots_persistent for the
+                     descriptor-ring kernel, or ops.extract_roots_sharded
+                     across a data mesh). A
                      tick is a dispatch/retire pipeline pass: up to
                      max_inflight launches stay outstanding as device
                      arrays while the host coalesces the next tiles;
@@ -321,15 +325,18 @@ class InflightTile:
 
     segments: list             # [(req, req_start, tile_start, count)]
     version: int               # DictStore version pinned at dispatch
-    roots_dev: object          # device int32 [super_b, 4]
-    sources_dev: object        # device int32 [super_b]
+    roots_dev: object          # device int32 [launch_b, 4]
+    sources_dev: object        # device int32 [launch_b]
     slot: int                  # staging-buffer ring slot held until retire
+    flags_dev: object = None   # persistent mode: int32 [n_tiles] completion
 
     def is_ready(self) -> bool:
         """True once the device arrays can be fetched without blocking."""
         try:
             return bool(self.roots_dev.is_ready()
-                        and self.sources_dev.is_ready())
+                        and self.sources_dev.is_ready()
+                        and (self.flags_dev is None
+                             or self.flags_dev.is_ready()))
         except AttributeError:   # backend without readiness introspection
             return True
 
@@ -343,10 +350,12 @@ class StemmerWorkload:
       retire    scatter back every launch whose device arrays are ready
                 (non-blocking readiness check; results land in the
                 per-request arrays, words move from dispatched to served)
-      dispatch  coalesce pending words FIFO into fixed
-                [data_devices * block_b, 16] super-tiles and launch —
-                repeatedly, until ``max_inflight`` launches are
-                outstanding or no undispatched words remain
+      dispatch  coalesce pending words FIFO into a megabatch of up to
+                ``megabatch_tiles`` [data_devices * block_b, 16]
+                super-tiles and launch the whole megabatch as ONE
+                megakernel call (the grid's batch axis spans every
+                coalesced tile) — repeatedly, until ``max_inflight``
+                launches are outstanding or no undispatched words remain
       drain     only a tick that would otherwise make NO progress
                 blocks: saturated (every slot outstanding, none ready)
                 waits for the oldest launch; draining (nothing left to
@@ -356,25 +365,43 @@ class StemmerWorkload:
                 submit/step iterations
 
     With ``max_inflight=1`` the pipeline degenerates to the synchronous
-    dispatch-then-retire tick (overlap off). Tile inputs are built in a
-    preallocated host staging buffer per ring slot (no per-tick
-    allocation); each launch pins the DictStore version it acquired at
-    dispatch, so hot swaps landing between dispatch and retire stay
-    exact per word. ``data_devices > 1`` routes launches through
-    ``ops.extract_roots_sharded`` (dist.shard_batch), splitting each
-    super-tile across a ("data",) mesh.
+    dispatch-then-retire tick (overlap off); with ``megabatch_tiles=1``
+    (default) each launch is one super-tile, the pre-megabatch contract.
+    A partially filled megabatch launches at the next power-of-two
+    super-tile count (capped at ``megabatch_tiles``), so a trickle-fed
+    queue replays a small bounded set of jit traces instead of one per
+    fill level. Tile inputs are built in a preallocated host staging
+    buffer per ring slot (no per-tick allocation); each launch pins the
+    DictStore version it acquired at dispatch, so hot swaps landing
+    between dispatch and retire stay exact per word. ``data_devices > 1``
+    routes launches through ``ops.extract_roots_sharded``
+    (dist.shard_batch), splitting each megabatch across a ("data",)
+    mesh. ``persistent=True`` routes launches through
+    ``ops.extract_roots_persistent`` — the single-launch descriptor-ring
+    kernel — and retire additionally checks the per-tile completion
+    flags against the pinned dict version (the device-side proof that
+    every descriptor retired under the version acquired at dispatch).
     """
 
     def __init__(self, store, *, block_b: int = 256, infix: bool = True,
                  match: str = "bsearch", dict_block_r: int = 8,
                  num_buffers: int = 2, skip_index: bool = True,
                  max_inflight: int = 2, data_devices: int = 1,
+                 megabatch_tiles: int = 1, persistent: bool = False,
                  max_requests: int | None = None,
                  interpret: bool | None = None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if data_devices < 1:
             raise ValueError(f"data_devices must be >= 1, got {data_devices}")
+        if megabatch_tiles < 1:
+            raise ValueError(
+                f"megabatch_tiles must be >= 1, got {megabatch_tiles}")
+        if persistent and data_devices > 1:
+            raise ValueError(
+                "persistent=True is single-device (the descriptor ring is"
+                " one kernel's SMEM); use megabatch_tiles for multi-device"
+                " coalescing")
         self.store = store
         self.block_b = block_b
         self.infix = infix
@@ -384,9 +411,12 @@ class StemmerWorkload:
         self.skip_index = skip_index
         self.max_inflight = max_inflight
         self.data_devices = data_devices
+        self.megabatch_tiles = megabatch_tiles
+        self.persistent = persistent
         self.max_requests = max_requests
         self.interpret = interpret
         self.super_b = block_b * data_devices
+        self.launch_b = self.super_b * megabatch_tiles
         self.inflight: list[StemRequest] = []
         self.ring: list[InflightTile] = []
         self.ticks_launched = 0   # megakernel launches (not engine ticks)
@@ -397,7 +427,7 @@ class StemmerWorkload:
             self._mesh = mesh_mod.make_data_mesh(data_devices)
         # one reusable host staging buffer per ring slot: dispatch fills
         # segments + zeroes the tail instead of allocating per tick
-        self._staging = [np.zeros((self.super_b, ab.MAXLEN), np.int32)
+        self._staging = [np.zeros((self.launch_b, ab.MAXLEN), np.int32)
                          for _ in range(max_inflight)]
         self._free_slots = list(range(max_inflight))
 
@@ -466,17 +496,29 @@ class StemmerWorkload:
         return any(req.n_words > req.dispatched for req in self.inflight)
 
     def _coalesce(self) -> list[tuple[StemRequest, int, int, int]]:
-        """FIFO-fill one super-tile with *undispatched* words:
+        """FIFO-fill one megabatch (up to ``megabatch_tiles`` super-tiles)
+        with *undispatched* words:
         -> [(req, req_start, tile_start, count)]."""
         segments, fill = [], 0
         for req in self.inflight:
-            if fill >= self.super_b:
+            if fill >= self.launch_b:
                 break
-            take = min(req.n_words - req.dispatched, self.super_b - fill)
+            take = min(req.n_words - req.dispatched, self.launch_b - fill)
             if take > 0:
                 segments.append((req, req.dispatched, fill, take))
                 fill += take
         return segments
+
+    def _bucket_rows(self, fill: int) -> int:
+        """Staging rows to launch for ``fill`` coalesced words: the next
+        power-of-two super-tile count, capped at megabatch_tiles, so a
+        ragged queue replays O(log megabatch_tiles) jit traces rather
+        than one per fill level."""
+        n_super = -(-fill // self.super_b)
+        bucket = 1
+        while bucket < n_super:
+            bucket *= 2
+        return min(bucket, self.megabatch_tiles) * self.super_b
 
     def _fill_ring(self) -> int:
         """Dispatch until max_inflight launches are outstanding or no
@@ -493,25 +535,34 @@ class StemmerWorkload:
     def _dispatch(self, segments):
         from repro.kernels import ops  # lazy: keep engine import light
 
-        dv = self.store.acquire()       # one version per super-tile launch
+        dv = self.store.acquire()       # one version per megabatch launch
         slot = self._free_slots.pop()
         tile = self._staging[slot]
         fill = 0
         for req, r0, t0, take in segments:
             tile[t0:t0 + take] = req.words[r0:r0 + take]
             fill = t0 + take
-        tile[fill:] = 0                 # padded words must stay empty
+        rows = self._bucket_rows(fill)
+        tile[fill:rows] = 0             # padded words must stay empty
+        flags = None
         try:
             if self._mesh is not None:
                 roots, sources = ops.extract_roots_sharded(
-                    jnp.asarray(tile), dv.handle, self._mesh,
+                    jnp.asarray(tile[:rows]), dv.handle, self._mesh,
                     infix=self.infix, match=self.match, block_b=self.block_b,
                     dict_block_r=self.dict_block_r,
                     num_buffers=self.num_buffers, skip_index=self.skip_index,
                     interpret=self.interpret)
+            elif self.persistent:
+                roots, sources, flags = ops.extract_roots_persistent(
+                    jnp.asarray(tile[:rows]), dv.handle, infix=self.infix,
+                    match=self.match, block_b=self.block_b,
+                    dict_block_r=self.dict_block_r,
+                    num_buffers=self.num_buffers, skip_index=self.skip_index,
+                    version_slot=dv.version, interpret=self.interpret)
             else:
                 roots, sources = ops.extract_roots_fused(
-                    jnp.asarray(tile), dv.handle, infix=self.infix,
+                    jnp.asarray(tile[:rows]), dv.handle, infix=self.infix,
                     match=self.match, block_b=self.block_b,
                     dict_block_r=self.dict_block_r,
                     num_buffers=self.num_buffers, skip_index=self.skip_index,
@@ -523,10 +574,13 @@ class StemmerWorkload:
             raise
         for req, _r0, _t0, take in segments:
             req.dispatched += take      # only a successful launch counts
-        entry = InflightTile(segments, dv.version, roots, sources, slot)
+        entry = InflightTile(segments, dv.version, roots, sources, slot,
+                             flags)
         try:                            # start D2H early; retire just reads
             roots.copy_to_host_async()
             sources.copy_to_host_async()
+            if flags is not None:
+                flags.copy_to_host_async()
         except AttributeError:
             pass
         self.ring.append(entry)
@@ -550,6 +604,15 @@ class StemmerWorkload:
         """Scatter one launch's results back (blocks if not yet ready)."""
         roots = np.asarray(entry.roots_dev)
         sources = np.asarray(entry.sources_dev)
+        if entry.flags_dev is not None:
+            # descriptor-ring integrity: every tile of the persistent
+            # launch must have completed under the version pinned at
+            # dispatch (flag = 1 + version slot; 0 = never processed)
+            flags = np.asarray(entry.flags_dev)
+            if not (flags == 1 + entry.version).all():
+                raise RuntimeError(
+                    "persistent launch retired with bad completion flags:"
+                    f" expected {1 + entry.version}, got {flags.tolist()}")
         for req, r0, t0, take in entry.segments:
             req.roots[r0:r0 + take] = roots[t0:t0 + take]
             req.sources[r0:r0 + take] = sources[t0:t0 + take]

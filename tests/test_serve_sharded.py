@@ -105,6 +105,27 @@ SCRIPT = textwrap.dedent("""
                                        store.get(v).arrays)
         np.testing.assert_array_equal(got_r[sl], np.asarray(want_r))
     print("SHARD_SWAP_OK")
+
+    # --- sharded megabatch: one launch spans megabatch_tiles super-tiles
+    # across the mesh, bit-identical to the per-super-tile path ---------
+    store = DictStore(arrays)
+    eng = Engine(StemmerWorkload(store, block_b=16, data_devices=4,
+                                 megabatch_tiles=2, max_inflight=1))
+    sizes = (37, 64, 5, 50)          # 156 words, launch_b=128 -> 2 launches
+    off, rids = 0, []
+    for n in sizes:
+        rids.append(eng.submit(enc[off:off + n])); off += n
+    rep = eng.run_until_drained()
+    assert rep.drained
+    assert eng.workload.launch_b == 128
+    assert eng.workload.ticks_launched == 2   # vs 3 per-super-tile above
+    want_r, want_s = stemmer.stem_batch(jnp.asarray(enc[:sum(sizes)]),
+                                        arrays)
+    got_r = np.concatenate([eng.result(r).roots for r in rids])
+    got_s = np.concatenate([eng.result(r).sources for r in rids])
+    np.testing.assert_array_equal(got_r, np.asarray(want_r))
+    np.testing.assert_array_equal(got_s, np.asarray(want_s))
+    print("SHARD_MEGABATCH_OK")
 """)
 
 
@@ -115,7 +136,8 @@ def test_sharded_serve_four_devices():
     proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                           capture_output=True, text=True, timeout=600)
     for marker in ("SHARD_BATCH_PARITY_OK", "SHARD_PIPELINE_KNOBS_OK",
-                   "SHARD_SERVE_PARITY_OK", "SHARD_SWAP_OK"):
+                   "SHARD_SERVE_PARITY_OK", "SHARD_SWAP_OK",
+                   "SHARD_MEGABATCH_OK"):
         assert marker in proc.stdout, proc.stderr[-2000:]
 
 
