@@ -1,5 +1,12 @@
 """Paper Tables 6 & 7 analogue: accuracy with/without infix processing,
-plus per-root accuracy for the highest-frequency roots."""
+plus per-root accuracy for the highest-frequency roots.
+
+Returns row dicts (CI-checked in BENCH_stemmer.json since PR 7): the
+``table6_*`` rows carry word accuracy and root recall — the paper's
+Table 6 measure, 87%/90.7% with/without-infix targets — so a speed PR
+that silently degrades analysis quality fails the smoke record check
+instead of landing.
+"""
 from __future__ import annotations
 
 from repro.core import accuracy
@@ -7,12 +14,24 @@ from repro.core import accuracy
 
 def main(n_words: int = 12000):
     res = accuracy.table6(n_words=n_words, seed=0)
-    w, wo = res["with_infix"], res["without_infix"]
-    print(f"table6_with_infix,{0:.3f},word_acc={w.accuracy:.3f}_root_recall={w.root_recall:.3f}")
-    print(f"table6_without_infix,{0:.3f},word_acc={wo.accuracy:.3f}_root_recall={wo.root_recall:.3f}")
+    rows = []
+    for label, rep in (("with_infix", res["with_infix"]),
+                       ("without_infix", res["without_infix"])):
+        rows.append({"name": f"table6_{label}", "us_per_call": 0.0,
+                     "infix": label == "with_infix",
+                     "word_acc": float(rep.accuracy),
+                     "root_recall": float(rep.root_recall),
+                     "n_words": n_words})
+        print(f"table6_{label},0,word_acc={rep.accuracy:.3f}"
+              f"_root_recall={rep.root_recall:.3f}")
     for row in accuracy.table7(n_words=n_words, seed=0, top_k=10):
+        rows.append({"name": f"table7_{row['root']}", "us_per_call": 0.0,
+                     "root": row["root"], "actual": int(row["actual"]),
+                     "with_infix": int(row["with_infix"]),
+                     "without_infix": int(row["without_infix"])})
         print(f"table7_{row['root']},{0:.3f},"
               f"actual={row['actual']}_with={row['with_infix']}_without={row['without_infix']}")
+    return rows
 
 
 if __name__ == "__main__":

@@ -15,8 +15,13 @@ Prints ``name,us_per_call,derived`` CSV lines:
   launch_overhead_*      (dispatch-overhead share: per-tile launches vs
                           one grid-over-queue megabatch vs the
                           persistent descriptor-ring kernel)
-  table6_*       Table 6 (accuracy ± infix processing)
+  table6_*       Table 6 (accuracy ± infix processing; CI floors the
+                          root-recall rows since PR 7)
   table7_*       Table 7 (per-root accuracy, top-frequency roots)
+  text_ingest_*  §7      (raw text in, roots out: front-end kernel +
+                          fused text->roots chain + serve path, bytes/sec
+                          and words/sec, clitic-stripping accuracy vs the
+                          python reference)
   compare_*      §6.4    (Compare-stage: linear vs sorted search)
   roofline_*     §Roofline (from dry-run records, if present)
 
@@ -66,6 +71,10 @@ SMOKE_PARAMS = {
     # word than per-tile at every depth, and a >= 4x drop at n_tiles 16
     "launch_overhead": dict(n_tiless=(1, 4, 16), block_b=32, iters=1),
     "accuracy": dict(n_words=2000),
+    # bytes-in/roots-out rows + the clitic-accuracy row CI floors against
+    # the committed baseline (grow_keys keeps a streamed fused row alive)
+    "text_ingest": dict(n_docs=6, words_per_doc=24, iters=1,
+                        grow_keys=131072, accuracy_words=400),
     "compare_stage": dict(n_keys=4096, dict_sizes=(512, 2048),
                           pallas_max_r=2048),
 }
@@ -85,7 +94,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (accuracy_bench, compare_stage, dict_scaling,
                             launch_overhead, roofline, scaling,
-                            serve_throughput, throughput)
+                            serve_throughput, text_ingest, throughput)
 
     sections = [
         ("throughput", throughput.main),
@@ -95,6 +104,7 @@ def main(argv=None) -> None:
         ("serve_throughput", serve_throughput.main),
         ("launch_overhead", launch_overhead.main),
         ("accuracy", accuracy_bench.main),
+        ("text_ingest", text_ingest.main),
         ("compare_stage", compare_stage.main),
         ("roofline", roofline.main),
     ]

@@ -1,0 +1,140 @@
+"""Text ingestion: end-to-end bytes in, roots out (DESIGN.md §7).
+
+What the pre-PR 7 benchmarks could not measure: every earlier section
+feeds pre-packed word tiles, but real traffic is raw UTF-8 Arabic text.
+This section streams synthesised documents (conjugated corpus words +
+attached clitics + punctuation) through the text front end and records:
+
+  frontend rows   the front-end launch alone (ops.text_to_words) and the
+                  fused chain (ops.extract_roots_text, resident and
+                  streamed dictionaries) — bytes/sec + words/sec
+  serve row       the same documents through Engine +
+                  TextAnalysisWorkload (dispatch/retire ring + megabatch)
+  host row        the python-reference pipeline + stem_batch, the
+                  software baseline
+  accuracy row    clitic-stripping accuracy: fraction of tokens whose
+                  kernel word row is bit-identical to the python
+                  reference (CI floors this at the committed baseline),
+                  plus the clitic recovery rate (stripped form == the
+                  pre-clitic bare word) as an informational diagnostic
+
+All numbers are interpret-mode CPU unless run on a TPU host.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.timing import bench as _bench
+from repro.core import corpus, stemmer
+from repro.core import textnorm as tn
+from repro.launch.serve import build_documents
+
+
+def _tile(docs):
+    chars, _, byte_off = tn.coalesce_docs(docs)
+    t = max(128, -(-chars.shape[0] // 128) * 128)
+    tile = np.zeros(t, np.int32)
+    tile[:chars.shape[0]] = chars
+    return tile
+
+
+def main(n_docs: int = 48, words_per_doc: int = 128, iters: int = 2,
+         n_tri: int = 1000, grow_keys: int = 131072, block_w: int = 128,
+         accuracy_words: int = 4000):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    d = corpus.build_dictionary(n_tri=n_tri, n_quad=120, seed=0)
+    arrays = stemmer.RootDictArrays.from_rootdict(d)
+
+    docs = build_documents(n_docs, words_per_doc)
+    n_bytes = sum(len(doc.encode("utf-8")) for doc in docs)
+    tile = _tile(docs)
+    n_words = int(np.asarray(tn.segment_geometry(tile).n_words))
+
+    rows = []
+
+    def row(name, variant, dt, extra=None):
+        r = {"name": f"text_ingest_{name}", "variant": variant,
+             "us_per_call": 1e6 * dt, "bytes_per_s": n_bytes / dt,
+             "words_per_s": n_words / dt, "n_docs": n_docs,
+             "n_bytes": n_bytes, "n_words": n_words}
+        r.update(extra or {})
+        rows.append(r)
+        print(f"{r['name']},{r['us_per_call']:.0f},"
+              f"bytes_per_s={r['bytes_per_s']:.0f}"
+              f"_words_per_s={r['words_per_s']:.0f}")
+
+    # -- front-end kernel alone (codepoints -> word tiles) ------------------
+    dt, _ = _bench(ops.text_to_words, tile, block_w=block_w,
+                   warmup=1, iters=iters)
+    row("frontend", "frontend_only", dt)
+
+    # -- fused chain: bytes -> roots, resident + streamed dictionaries -----
+    dt, _ = _bench(ops.extract_roots_text, tile, arrays, block_w=block_w,
+                   warmup=1, iters=iters)
+    row("fused_resident", "fused", dt, {"residency": "resident"})
+    if grow_keys:
+        grown = corpus.grow_root_arrays(arrays, grow_keys, seed=3)
+        dt, _ = _bench(ops.extract_roots_text, tile, grown,
+                       block_w=block_w, residency="streamed",
+                       warmup=1, iters=iters)
+        row("fused_streamed", "fused", dt, {"residency": "streamed",
+                                            "n_keys": grow_keys})
+
+    # -- serve path: documents through the dispatch/retire ring ------------
+    from repro.serve import DictStore, Engine, TextAnalysisWorkload
+
+    def serve_once():
+        store = DictStore(arrays)
+        eng = Engine(TextAnalysisWorkload(store, block_b=block_w,
+                                          megabatch_tiles=2))
+        rids = [eng.submit(doc) for doc in docs]
+        eng.run_until_drained(max_ticks=10_000)
+        return sum(eng.result(r).n_words for r in rids)
+
+    dt, served = _bench(serve_once, warmup=1, iters=iters)
+    row("serve", "serve", dt, {"served_words": int(served)})
+
+    # -- host baseline: python front end + stem_batch -----------------------
+    def host_once():
+        total = 0
+        for doc in docs:
+            w, _ = tn.analyze_text_py(doc)
+            stemmer.stem_batch(jnp.asarray(w), arrays)
+            total += w.shape[0]
+        return total
+
+    dt, _ = _bench(host_once, warmup=0, iters=1)
+    row("host_reference", "host", dt)
+
+    # -- clitic-stripping accuracy vs the python reference ------------------
+    words, _, _ = corpus.build_corpus(n_words=accuracy_words, seed=11)
+    pro = ("", "وال", "ب", "ف", "لل", "ك", "و")
+    enc = ("", "ها", "هم", "كم", "ه", "نا", "هما")
+    toks = [pro[i % len(pro)] + w + enc[i % len(enc)]
+            for i, w in enumerate(words)]
+    acc_doc = " ".join(toks)
+    acc_tile = _tile([acc_doc])
+    want, _ = tn.analyze_text_py(acc_doc)
+    got_d, _, nw = ops.text_to_words(acc_tile, block_w=block_w)
+    got = np.asarray(got_d)[:int(nw)]
+    assert got.shape == want.shape, (got.shape, want.shape)
+    match = (got == want).all(axis=1)
+    bare = np.stack([tn.word_row_py(tuple(map(ord, w))) for w in words])
+    recovered = (got == bare).all(axis=1)
+    acc_row = {"name": "text_ingest_clitic_accuracy",
+               "us_per_call": 0.0,
+               "clitic_accuracy": float(match.mean()),
+               "clitic_recovery": float(recovered.mean()),
+               "n_words": int(match.size)}
+    rows.append(acc_row)
+    print(f"text_ingest_clitic_accuracy,0,"
+          f"accuracy={acc_row['clitic_accuracy']:.4f}"
+          f"_recovery={acc_row['clitic_recovery']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

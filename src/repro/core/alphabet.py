@@ -57,18 +57,34 @@ _LETTERS = [
 
 PAD = 0  # empty register slot ("U" in the paper's ModelSim traces)
 
-# Normalisation map: hamza-carrier alef forms collapse onto plain alef; the
-# paper explicitly ignores the ا/أ distinction.
-_NORMALISE = {
+# Normalisation map: hamza-carrier alef forms collapse onto plain alef (the
+# paper explicitly ignores the ا/أ distinction) and taa marbuta onto teh —
+# the full Snippet-1 rule set. ة only ever occurs word-finally in correct
+# orthography and reads as ت there, so the collapse is unconditional; ت is a
+# SUFFIX letter, so the stemmer's prefix/suffix cuts still reach the root.
+TATWEEL = 0x0640     # ـ kashida: elongation filler, stripped like a mark
+NORMALISE = {
     0x0622: 0x0627,  # آ
     0x0623: 0x0627,  # أ
     0x0625: 0x0627,  # إ
     0x0671: 0x0627,  # ٱ wasla
+    0x0629: 0x062A,  # ة -> ت taa marbuta
 }
 
 # Diacritics stripped from input (§3.1): fatha, damma, kasra, sukun, shadda,
-# tanween forms, plus Quranic superscript alef.
-_DIACRITICS = set(range(0x064B, 0x0653)) | {0x0670, 0x0653, 0x0654, 0x0655}
+# tanween forms, the hamza/madda combining marks, superscript alef, the rest
+# of the 0x0656-0x065F combining block, and the Quranic annotation marks
+# (small high/low signs, sajdah, stop marks — U+06D6..U+06ED) that Quranic
+# text carries alongside ordinary tashkil.
+DIACRITICS = (set(range(0x064B, 0x0660))            # tashkil + 0653-065F
+              | {0x0670}                            # superscript alef
+              | set(range(0x06D6, 0x06DD))          # small high ligatures
+              | set(range(0x06DF, 0x06E5))          # small high/low signs
+              | {0x06E7, 0x06E8}                    # small high yeh/noon
+              | set(range(0x06EA, 0x06EE)))         # empty centre marks
+# back-compat aliases (pre-PR 7 private names)
+_NORMALISE = NORMALISE
+_DIACRITICS = DIACRITICS
 
 MAXLEN = 16          # 15-char register file + 1 pad slot (paper uses 15)
 WORD_SLOTS = MAXLEN
@@ -108,13 +124,20 @@ YEH = CP_TO_CODE[0x064A]
 
 
 def normalise(text: str) -> str:
-    """Strip diacritics + tatweel, collapse alef variants (paper §3.1)."""
+    """Strip diacritics + tatweel, collapse alef variants and taa marbuta
+    (paper §3.1 + SNIPPETS Snippet 1).
+
+    Thin wrapper over the shared NORMALISE / DIACRITICS tables — the same
+    tables core.textnorm compiles into the segmentation CLASS_LUT, so the
+    host string path, the jnp reference, and the Pallas text front-end
+    kernel cannot drift (parity-tested per rule in tests/test_textnorm.py).
+    """
     out = []
     for ch in text:
         cp = ord(ch)
-        if cp in _DIACRITICS or cp == 0x0640:  # tatweel
+        if cp in DIACRITICS or cp == TATWEEL:
             continue
-        cp = _NORMALISE.get(cp, cp)
+        cp = NORMALISE.get(cp, cp)
         out.append(chr(cp))
     return "".join(out)
 

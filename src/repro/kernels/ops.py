@@ -85,6 +85,69 @@ def unpack_keys(keys: jnp.ndarray) -> jnp.ndarray:
     )
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("block_w", "max_words", "interpret"))
+def _text_to_words_jit(chars, *, block_w, max_words, interpret):
+    from repro.core import textnorm as tn
+    from repro.kernels import text_frontend as tf
+
+    geo = tn.segment_geometry(chars, block_w=block_w, max_words=max_words)
+    words = tf.text_frontend_pallas(chars, geo.starts, geo.lens,
+                                    block_w=block_w, interpret=interpret)
+    return words, geo.spans, geo.n_words
+
+
+def text_to_words(chars, *, block_w: int = 128,
+                  max_words: int | None = None,
+                  interpret: bool | None = None):
+    """Text front-end launch: codepoint tile int32[T] (0-padded) ->
+    (words int32[Wp, 16], spans int32[Wp, 2], n_words int32).
+
+    One pallas_call (kernels/text_frontend.py) preceded by the jnp
+    segmentation-geometry pre-pass in the same jit scope — the visit-index
+    pattern: word starts/lengths/byte spans come from XLA scatters, the
+    dense per-word normalise/strip/pack work runs in the kernel. Rows at
+    and past ``n_words`` are zero; bit-identical to
+    ``textnorm.analyze_text_py`` on the decoded text.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    _count_dispatches(1)
+    return _text_to_words_jit(jnp.asarray(chars, jnp.int32),
+                              block_w=block_w, max_words=max_words,
+                              interpret=interpret)
+
+
+def extract_roots_text(chars, roots, *, block_w: int = 128,
+                       max_words: int | None = None, infix: bool = True,
+                       match: str = "bsearch", block_b: int | None = None,
+                       residency: str = "auto", dict_block_r: int = 8,
+                       num_buffers: int = 2, skip_index: bool = True,
+                       visit_budget: int | None = None,
+                       interpret: bool | None = None):
+    """Bytes in, roots out: codepoint tile -> (roots int32[Wp, 4],
+    sources int32[Wp], spans int32[Wp, 2], n_words int32).
+
+    Chains the text front-end kernel straight into the stemmer megakernel
+    — the word tiles stay on device between the two launches (and the
+    visit-index pre-pass consumes them there), so there is no host
+    round-trip at the text/stemmer boundary. block_b defaults to block_w
+    so the front end's padded word rows feed the megakernel without
+    re-tiling. Rows past ``n_words`` come from all-zero words and carry
+    SRC_NONE.
+    """
+    words, spans, n_words = text_to_words(chars, block_w=block_w,
+                                          max_words=max_words,
+                                          interpret=interpret)
+    root, source = extract_roots_fused(
+        words, roots, infix=infix, match=match,
+        block_b=block_b or block_w, residency=residency,
+        dict_block_r=dict_block_r, num_buffers=num_buffers,
+        skip_index=skip_index, visit_budget=visit_budget,
+        interpret=interpret)
+    return root, source, spans, n_words
+
+
 def extract_roots_fused(words, roots, *, infix: bool = True,
                         match: str = "bsearch", block_b: int = 256,
                         residency: str = "auto", dict_block_r: int = 8,

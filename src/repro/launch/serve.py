@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve --workload lm --arch llama3-8b --requests 8
   PYTHONPATH=src python -m repro.launch.serve --workload stemmer --requests 16
+  PYTHONPATH=src python -m repro.launch.serve --workload text --requests 16
 """
 from __future__ import annotations
 
@@ -14,7 +15,8 @@ import numpy as np
 from repro import configs
 from repro.models import model as model_mod
 from repro.models import params as pm
-from repro.serve import DictStore, Engine, LMDecodeWorkload, StemmerWorkload
+from repro.serve import (DictStore, Engine, LMDecodeWorkload,
+                         StemmerWorkload, TextAnalysisWorkload)
 
 
 def required_cache_len(prompt_len: int, max_new: int) -> int:
@@ -93,9 +95,67 @@ def serve_stemmer(args) -> None:
         print(f"  req {rid}: {req.n_words} roots, dict v{req.dict_version}")
 
 
+def build_documents(n_docs: int, words_per_doc: int, seed: int = 1):
+    """Synthesise raw Arabic documents from the conjugated corpus: words
+    joined with spaces, an Arabic comma sprinkled every ~8 words, and a
+    rotating clitic attached to every third word so the front end's
+    stripping path is exercised end to end."""
+    from repro.core import corpus
+
+    words, _, _ = corpus.build_corpus(n_words=n_docs * words_per_doc,
+                                      seed=seed)
+    pro = ("وال", "ب", "ف", "لل", "ك")
+    docs = []
+    for i in range(n_docs):
+        chunk = words[i * words_per_doc:(i + 1) * words_per_doc]
+        toks = [pro[j % len(pro)] + w if j % 3 == 0 else w
+                for j, w in enumerate(chunk)]
+        toks = [t + "،" if j % 8 == 7 else t for j, t in enumerate(toks)]
+        docs.append(" ".join(toks))
+    return docs
+
+
+def serve_text(args) -> None:
+    from repro.core import corpus, stemmer
+
+    d = corpus.build_dictionary(n_tri=1000, n_quad=120, seed=0)
+    store = DictStore(stemmer.RootDictArrays.from_rootdict(d),
+                      dict_block_r=args.dict_block_r)
+    eng = Engine(TextAnalysisWorkload(store, block_b=args.block_b,
+                                      char_block=args.char_block,
+                                      frontend=args.frontend,
+                                      dict_block_r=args.dict_block_r,
+                                      num_buffers=args.num_buffers,
+                                      skip_index=not args.full_sweep,
+                                      max_inflight=args.inflight,
+                                      data_devices=args.devices,
+                                      megabatch_tiles=args.megabatch,
+                                      persistent=args.persistent))
+
+    docs = build_documents(args.requests, args.words_per_request)
+    n_bytes = sum(len(doc.encode("utf-8")) for doc in docs)
+    t0 = time.time()
+    rids = [eng.submit(doc) for doc in docs]
+    rep = eng.run_until_drained()
+    dt = time.time() - t0
+    n_words = sum(eng.result(r).n_words for r in rids)
+    print(f"served {args.requests} documents / {n_bytes} bytes /"
+          f" {n_words} words in {dt:.2f}s ({n_bytes / dt:.0f} B/s,"
+          f" {n_words / dt:.1f} Wps, {rep.ticks} ticks,"
+          f" {eng.workload.ticks_launched} launches,"
+          f" frontend {args.frontend}, megabatch {args.megabatch},"
+          f" inflight {args.inflight})")
+    for rid in rids[:2]:
+        req = eng.result(rid)
+        root, src, span = req.analyses()[0][0]
+        print(f"  req {rid}: {req.n_words} tokens, first root {root!r}"
+              f" (src {src}, bytes {span})")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=("lm", "stemmer"), default="lm")
+    ap.add_argument("--workload", choices=("lm", "stemmer", "text"),
+                    default="lm")
     ap.add_argument("--requests", type=int, default=8)
     # lm knobs
     ap.add_argument("--arch", default="llama3-8b")
@@ -134,10 +194,20 @@ def main():
                     help="persistent serving kernel: ONE launch loops a"
                          " device-side work-descriptor ring over the"
                          " megabatch (single-device only)")
+    # text knobs
+    ap.add_argument("--char-block", type=int, default=2048,
+                    help="codepoint-tile bucket for the text front end"
+                         " (requests round up to a pow2 multiple)")
+    ap.add_argument("--frontend", choices=("kernel", "reference", "host"),
+                    default="kernel",
+                    help="text front end: Pallas kernel, pure-jnp"
+                         " reference, or the python oracle")
     args = ap.parse_args()
 
     if args.workload == "stemmer":
         serve_stemmer(args)
+    elif args.workload == "text":
+        serve_text(args)
     else:
         serve_lm(args)
 

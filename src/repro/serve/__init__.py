@@ -9,9 +9,11 @@ from repro.serve.engine import (DrainReport, Engine, EngineUndrained,
                                 InflightTile, LMDecodeWorkload, Request,
                                 ServeEngine, StemRequest, StemmerWorkload,
                                 Workload)
+from repro.serve.text import TextAnalysisWorkload, TextRequest
 
 __all__ = [
     "DictStore", "DictVersion", "DrainReport", "Engine", "EngineUndrained",
     "InflightTile", "LMDecodeWorkload", "Request", "ServeEngine",
-    "StemRequest", "StemmerWorkload", "Workload",
+    "StemRequest", "StemmerWorkload", "TextAnalysisWorkload", "TextRequest",
+    "Workload",
 ]

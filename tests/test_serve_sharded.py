@@ -126,6 +126,30 @@ SCRIPT = textwrap.dedent("""
     np.testing.assert_array_equal(got_r, np.asarray(want_r))
     np.testing.assert_array_equal(got_s, np.asarray(want_s))
     print("SHARD_MEGABATCH_OK")
+
+    # --- text workload over the mesh: raw documents through the sharded
+    # super-tile ring, bit-identical to the host pipeline --------------
+    from repro.core import textnorm as tn
+    from repro.launch.serve import build_documents
+    from repro.serve import TextAnalysisWorkload
+
+    store = DictStore(arrays)
+    eng = Engine(TextAnalysisWorkload(store, block_b=16, data_devices=4,
+                                      char_block=256, megabatch_tiles=2,
+                                      max_inflight=2))
+    docs = build_documents(4, 40, seed=2)
+    rids = [eng.submit([d]) for d in docs]
+    rep = eng.run_until_drained()
+    assert rep.drained
+    for rid, doc in zip(rids, docs):
+        req = eng.result(rid)
+        want_w, want_spans = tn.analyze_text_py(doc)
+        np.testing.assert_array_equal(req.words, want_w)
+        np.testing.assert_array_equal(req.spans, want_spans)
+        want_r, want_s = stemmer.stem_batch(jnp.asarray(want_w), arrays)
+        np.testing.assert_array_equal(req.roots, np.asarray(want_r))
+        np.testing.assert_array_equal(req.sources, np.asarray(want_s))
+    print("TEXT_SHARD_OK")
 """)
 
 
@@ -137,7 +161,7 @@ def test_sharded_serve_four_devices():
                           capture_output=True, text=True, timeout=600)
     for marker in ("SHARD_BATCH_PARITY_OK", "SHARD_PIPELINE_KNOBS_OK",
                    "SHARD_SERVE_PARITY_OK", "SHARD_SWAP_OK",
-                   "SHARD_MEGABATCH_OK"):
+                   "SHARD_MEGABATCH_OK", "TEXT_SHARD_OK"):
         assert marker in proc.stdout, proc.stderr[-2000:]
 
 
