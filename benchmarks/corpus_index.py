@@ -1,0 +1,102 @@
+"""Corpus-scale inverted indexing: the batch analytics workload (§IR).
+
+The Bessou & Touahria line of work (PAPERS.md) motivates the killer
+batch scenario — root-based indexing for Arabic retrieval. This section
+streams seeded synthetic corpora (core/corpus.py token-table streams)
+through the stemmer-megakernel -> postings-reduction chain and records,
+per corpus size:
+
+  build rows   corpus_index_build_{n}: sustained words/sec and total
+               index_build_s through repro.index.build_corpus_index
+               (chunked driver, device-side postings build), plus the
+               resulting posting count
+  host rows    corpus_index_host_{n}: the vectorised numpy reference
+               build (stem_batch ids + stable argsort) — the software
+               baseline the device path is ratioed against in CI
+  parity row   corpus_index_parity: bit-identity of the two indexes at
+               the smallest size (counts, docs, positions) — a bench run
+               can never record a fast-but-wrong build
+
+All numbers are interpret-mode CPU unless run on a TPU host.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.timing import bench as _bench
+from repro.core import corpus, stemmer
+
+
+def main(sizes=(100_000, 1_000_000), chunk_words: int = 65536,
+         words_per_doc: int = 500, n_tri: int = 2000, n_quad: int = 200,
+         block_b: int = 2048, block_w: int = 2048, seed: int = 0):
+    from repro import index as ix
+
+    d = corpus.build_dictionary(n_tri=n_tri, n_quad=n_quad, seed=0)
+    arrays = stemmer.RootDictArrays.from_rootdict(d)
+    vocab = ix.build_vocab(arrays)
+    table = corpus.build_token_table()
+
+    rows = []
+
+    def row(name, dt, n_words, extra=None):
+        r = {"name": f"corpus_index_{name}", "us_per_call": 1e6 * dt,
+             "index_build_s": dt, "words_per_s": n_words / dt,
+             "n_words": n_words, "n_roots": int(vocab.shape[0])}
+        r.update(extra or {})
+        rows.append(r)
+        print(f"{r['name']},{r['us_per_call']:.0f},"
+              f"words_per_s={r['words_per_s']:.0f}"
+              f"_index_build_s={r['index_build_s']:.3f}")
+        return r
+
+    indexes = {}
+    for n in sizes:
+        def build(n=n):
+            stream = corpus.stream_corpus_words(
+                n, seed=seed, chunk_words=chunk_words,
+                words_per_doc=words_per_doc, table=table)
+            return ix.build_corpus_index(stream, arrays, block_b=block_b,
+                                         block_w=block_w)
+        dt, idx = _bench(build, warmup=0, iters=1)
+        indexes[n] = idx
+        row(f"build_{n}", dt, n, {"n_postings": idx.n_postings,
+                                  "chunk_words": chunk_words,
+                                  "block_w": block_w})
+
+    # -- host numpy reference build (and the parity check input) -----------
+    host = {}
+    for n in sizes:
+        def host_build(n=n):
+            parts = []
+            for ch in corpus.stream_corpus_words(
+                    n, seed=seed, chunk_words=chunk_words,
+                    words_per_doc=words_per_doc, table=table):
+                ids = ix.host_root_ids(ch.words, arrays, vocab,
+                                       chunk=chunk_words)
+                parts.append((ids, ch.doc_ids.astype(np.int32),
+                              ch.positions))
+            ids = np.concatenate([p[0] for p in parts])
+            docs = np.concatenate([p[1] for p in parts])
+            poss = np.concatenate([p[2] for p in parts])
+            return ix.host_index(ids, docs, poss, len(vocab))
+        dt, ref = _bench(host_build, warmup=0, iters=1)
+        host[n] = ref
+        row(f"host_{n}", dt, n, {"n_postings": int(ref[0].sum())})
+
+    # -- parity: the recorded numbers describe a bit-identical index --------
+    n0 = min(sizes)
+    idx, (w_counts, w_docs, w_poss) = indexes[n0], host[n0]
+    identical = (np.array_equal(idx.counts, w_counts)
+                 and np.array_equal(idx.docs, w_docs)
+                 and np.array_equal(idx.positions, w_poss))
+    assert identical, f"device index diverged from host reference at {n0}"
+    rows.append({"name": "corpus_index_parity", "us_per_call": 0.0,
+                 "identical": True, "n_words": n0,
+                 "n_postings": idx.n_postings})
+    print(f"corpus_index_parity,0,identical=True_n_words={n0}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

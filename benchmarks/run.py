@@ -23,6 +23,10 @@ Prints ``name,us_per_call,derived`` CSV lines:
                           and words/sec, clitic-stripping accuracy vs the
                           python reference)
   compare_*      §6.4    (Compare-stage: linear vs sorted search)
+  corpus_index_* IR      (corpus-scale inverted-index build: words/sec +
+                          index_build_s per corpus size through the
+                          megakernel -> postings-reduction chain, host
+                          numpy reference timings, device/host parity)
   roofline_*     §Roofline (from dry-run records, if present)
 
 Sections that return row dicts (throughput / scaling / compare_stage)
@@ -38,7 +42,8 @@ Flags:
                  untouched sections keep their rows in an existing JSON
                  record instead of being dropped — unless the existing
                  record's smoke flag differs (never mix smoke and
-                 full-size rows in one record)
+                 full-size rows in one record); unknown names error
+  --list-sections print the known section names and exit
 """
 from __future__ import annotations
 
@@ -77,7 +82,29 @@ SMOKE_PARAMS = {
                         grow_keys=131072, accuracy_words=400),
     "compare_stage": dict(n_keys=4096, dict_sizes=(512, 2048),
                           pallas_max_r=2048),
+    # two corpus sizes so CI can check the words/sec + index_build_s pair
+    # at each, plus the device-vs-host parity row
+    "corpus_index": dict(sizes=(8192, 32768), chunk_words=8192,
+                         block_b=1024, block_w=1024),
 }
+
+# The authoritative section-name list, importable without jax (the heavy
+# benchmark modules load lazily inside main): --sections validation and
+# --list-sections both read it, and adding a section here without a
+# matching entry in the table below fails loudly at startup.
+SECTION_NAMES = (
+    "throughput",
+    "scaling",
+    "dict_scaling",
+    "dict_stream_pipeline",
+    "serve_throughput",
+    "launch_overhead",
+    "accuracy",
+    "text_ingest",
+    "compare_stage",
+    "corpus_index",
+    "roofline",
+)
 
 
 def main(argv=None) -> None:
@@ -90,31 +117,43 @@ def main(argv=None) -> None:
                     help="comma-separated section filter (default: all);"
                          " unfiltered sections keep their existing rows"
                          " in the JSON record")
+    ap.add_argument("--list-sections", action="store_true",
+                    help="print the known section names and exit")
     args = ap.parse_args(argv)
 
-    from benchmarks import (accuracy_bench, compare_stage, dict_scaling,
-                            launch_overhead, roofline, scaling,
-                            serve_throughput, text_ingest, throughput)
+    if args.list_sections:
+        for name in SECTION_NAMES:
+            print(name)
+        return
 
-    sections = [
-        ("throughput", throughput.main),
-        ("scaling", scaling.main),
-        ("dict_scaling", dict_scaling.main),
-        ("dict_stream_pipeline", dict_scaling.main_pipeline),
-        ("serve_throughput", serve_throughput.main),
-        ("launch_overhead", launch_overhead.main),
-        ("accuracy", accuracy_bench.main),
-        ("text_ingest", text_ingest.main),
-        ("compare_stage", compare_stage.main),
-        ("roofline", roofline.main),
-    ]
     only = {s for s in args.sections.split(",") if s}
     if only:
-        known = {name for name, _ in sections}
-        unknown = only - known
+        unknown = only - set(SECTION_NAMES)
         if unknown:
             ap.error(f"unknown sections {sorted(unknown)}"
-                     f" (choose from {sorted(known)})")
+                     f" (choose from {sorted(SECTION_NAMES)})")
+
+    from benchmarks import (accuracy_bench, compare_stage, corpus_index,
+                            dict_scaling, launch_overhead, roofline,
+                            scaling, serve_throughput, text_ingest,
+                            throughput)
+
+    fns = {
+        "throughput": throughput.main,
+        "scaling": scaling.main,
+        "dict_scaling": dict_scaling.main,
+        "dict_stream_pipeline": dict_scaling.main_pipeline,
+        "serve_throughput": serve_throughput.main,
+        "launch_overhead": launch_overhead.main,
+        "accuracy": accuracy_bench.main,
+        "text_ingest": text_ingest.main,
+        "compare_stage": compare_stage.main,
+        "corpus_index": corpus_index.main,
+        "roofline": roofline.main,
+    }
+    assert set(fns) == set(SECTION_NAMES), "SECTION_NAMES out of sync"
+    sections = [(n, fns[n]) for n in SECTION_NAMES]
+    if only:
         sections = [(n, f) for n, f in sections if n in only]
     record: dict = {"schema": 1, "smoke": args.smoke,
                     "platform": platform.platform(), "sections": {}}

@@ -9,6 +9,8 @@ exactly the accuracy/coverage trade-off LB stemmers face.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import numpy as np
 
 from repro.core import alphabet as ab
@@ -159,3 +161,147 @@ def build_corpus(
 
 def encode_corpus(words: list[str]) -> np.ndarray:
     return ab.encode_batch(words)
+
+
+# ---------------------------------------------------------------------------
+# Corpus-scale document streams (the batch-indexing workload, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+# build_corpus() materialises python string lists — fine at 20K words,
+# hopeless at 10M. The streaming generators below sample from a prebuilt
+# TokenTable instead: every distinct surface token's text AND its
+# kernel-front-end word row (textnorm.word_row_py — the PR 7 rule
+# pipeline: normalise, clitic strip, pack) are computed exactly once, so
+# emitting a chunk is one vectorised rng.choice + one numpy gather. A
+# generated document therefore round-trips the text front end by
+# construction: analyze_text_py(" ".join(texts)) produces precisely the
+# table rows the word stream hands the megakernel directly.
+
+
+@dataclass(frozen=True)
+class TokenTable:
+    """Distinct surface tokens with precomputed front-end word rows.
+
+    texts  tuple[str]            surface forms (clitics attached)
+    rows   int32[n_tokens, 16]   textnorm.word_row_py of each token
+    probs  float64[n_tokens]     sampling distribution (Zipf over roots,
+                                 uniform over a root's tokens)
+    """
+
+    texts: tuple
+    rows: np.ndarray
+    probs: np.ndarray
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.texts)
+
+
+def build_token_table(*, forms_per_root: int = 24, clitic_every: int = 3,
+                      zipf_a: float = 1.3, rich: bool = True) -> TokenTable:
+    """Enumerate the corpus streams' token universe, deterministically.
+
+    Every real root contributes its first ``forms_per_root`` conjugated
+    forms; every ``clitic_every``-th form additionally appears with a
+    textnorm proclitic/enclitic attached (cycled, not sampled — the
+    table itself is rng-free). Root probabilities follow the same Zipf
+    law as build_corpus; a root's mass splits uniformly over its tokens.
+    """
+    from repro.core import textnorm as tn  # lazy: textnorm imports peers
+
+    roots = REAL_TRI_ROOTS + REAL_QUAD_ROOTS
+    ranks = np.arange(1, len(roots) + 1, dtype=np.float64)
+    root_p = ranks ** (-zipf_a)
+    root_p /= root_p.sum()
+
+    texts, probs = [], []
+    pro = tn.PROCLITICS
+    enc = tn.ENCLITICS
+    for ridx, root in enumerate(roots):
+        forms = [w for w, _ in conjugator.conjugate(root, rich=rich)]
+        forms = list(dict.fromkeys(forms))[:forms_per_root]
+        toks = list(forms)
+        for i, w in enumerate(forms):
+            if clitic_every and i % clitic_every == 0:
+                toks.append(pro[(ridx + i) % len(pro)] + w)
+            if clitic_every and i % clitic_every == 1:
+                toks.append(w + enc[(ridx + i) % len(enc)])
+        toks = list(dict.fromkeys(toks))
+        texts.extend(toks)
+        probs.extend([root_p[ridx] / len(toks)] * len(toks))
+    rows = np.stack([tn.word_row_py(tuple(map(ord, t))) for t in texts])
+    probs = np.asarray(probs, np.float64)
+    return TokenTable(texts=tuple(texts), rows=rows, probs=probs / probs.sum())
+
+
+@dataclass(frozen=True)
+class CorpusChunk:
+    """One streamed slice of a synthetic corpus, pre-encoded.
+
+    words      int32[n, 16]  front-end word rows (megakernel input)
+    doc_ids    int64[n]      global document id per word
+    positions  int32[n]      word position within its document
+    start_word int           global index of words[0] in the corpus
+    """
+
+    words: np.ndarray
+    doc_ids: np.ndarray
+    positions: np.ndarray
+    start_word: int
+
+    @property
+    def n_words(self) -> int:
+        return self.words.shape[0]
+
+
+def stream_corpus_words(n_words: int, *, seed: int = 0,
+                        chunk_words: int = 65536, words_per_doc: int = 1000,
+                        table: TokenTable | None = None):
+    """Yield a seeded ``n_words``-word corpus as CorpusChunks of encoded
+    word rows — the fast ingest path for corpus-scale index builds.
+
+    Deterministic per (seed, chunk_words, words_per_doc): chunk ``c`` is
+    drawn from ``default_rng([seed, c])``, so resuming a checkpointed
+    build re-yields byte-identical chunks without replaying the earlier
+    ones' rng streams. Documents are ``words_per_doc`` words long and
+    split across chunk boundaries exactly (doc ids and positions are
+    functions of the global word index alone).
+    """
+    if table is None:
+        table = build_token_table()
+    for c, w0 in enumerate(range(0, n_words, chunk_words)):
+        n = min(chunk_words, n_words - w0)
+        rng = np.random.default_rng([seed, c])
+        tok = rng.choice(table.n_tokens, size=n, p=table.probs)
+        gwi = w0 + np.arange(n, dtype=np.int64)
+        yield CorpusChunk(words=table.rows[tok],
+                          doc_ids=gwi // words_per_doc,
+                          positions=(gwi % words_per_doc).astype(np.int32),
+                          start_word=w0)
+
+
+def stream_corpus_docs(n_words: int, *, seed: int = 0,
+                       chunk_words: int = 65536, words_per_doc: int = 100,
+                       table: TokenTable | None = None):
+    """The same corpus as :func:`stream_corpus_words` (same seed → the
+    same token sequence) but rendered as raw text: yields
+    ``(doc0, docs)`` per chunk where ``docs`` is the chunk's list of
+    document strings and ``doc0`` the global id of ``docs[0]``.
+
+    ``chunk_words`` must be a multiple of ``words_per_doc`` so documents
+    never straddle a text chunk (the byte-ingest path attributes words
+    to documents per chunk). Each document round-trips the kernel front
+    end to exactly the word rows the words stream emits.
+    """
+    if chunk_words % words_per_doc:
+        raise ValueError(
+            f"chunk_words ({chunk_words}) must be a multiple of"
+            f" words_per_doc ({words_per_doc}) for the document stream")
+    if table is None:
+        table = build_token_table()
+    for c, w0 in enumerate(range(0, n_words, chunk_words)):
+        n = min(chunk_words, n_words - w0)
+        rng = np.random.default_rng([seed, c])
+        tok = rng.choice(table.n_tokens, size=n, p=table.probs)
+        docs = [" ".join(table.texts[t] for t in tok[d0:d0 + words_per_doc])
+                for d0 in range(0, n, words_per_doc)]
+        yield w0 // words_per_doc, docs

@@ -1,0 +1,15 @@
+"""Batch analytics: corpus-scale root -> (doc, position) inverted indexing.
+
+The sustained-throughput consumer of the whole stack — corpus chunks
+stream through the stemmer megakernel into the postings reduction kernel
+(kernels/postings.py) with no per-word host work, shard over the
+``("data",)`` mesh, and checkpoint per chunk (DESIGN.md §8).
+"""
+from repro.index.builder import (IndexPartial, RootIndex, build_corpus_index,
+                                 build_vocab, merge_partials)
+from repro.index.reference import host_index, host_root_ids
+
+__all__ = [
+    "IndexPartial", "RootIndex", "build_corpus_index", "build_vocab",
+    "merge_partials", "host_index", "host_root_ids",
+]

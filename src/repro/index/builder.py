@@ -1,0 +1,235 @@
+"""The chunked corpus-index driver: stream -> megakernel -> postings ->
+checkpointed partials -> one merged RootIndex.
+
+Each corpus chunk is one ``ops.build_root_index`` call — stemmer
+megakernel chained into the postings reduction kernel in a single jit
+scope (sharded over the ``("data",)`` mesh when given one). The host
+loop is over *chunks only*; per-word work never leaves the device, and
+the per-chunk partials merge with vectorised searchsorted/scatter numpy
+(no word loop there either).
+
+Checkpointing: with ``checkpoint_dir`` every completed chunk lands as an
+``.npz`` partial plus an atomically-rewritten ``manifest.json`` that
+records the vocab fingerprint and, per chunk, the word range and the
+``DictStore`` version pinned while stemming it. ``resume=True`` replays
+the manifest — completed chunks load from disk (their stream items are
+consumed and cross-checked, not recomputed) and the build continues from
+the first missing chunk, producing a bit-identical index.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import alphabet as ab
+from repro.core import stemmer as core_stemmer
+
+MANIFEST_SCHEMA = 1
+
+
+def build_vocab(arrays) -> np.ndarray:
+    """RootDictArrays -> sorted unique packed 24-bit root keys int32[n].
+
+    The union of the tri/quad/bi tables minus padding sentinels — every
+    key the megakernel can emit as a match. Index root ids are positions
+    in this array.
+    """
+    arrays, _, _ = core_stemmer.unwrap_dict(arrays)
+    keys = np.unique(np.concatenate([np.asarray(t).ravel() for t in
+                                     (arrays.tri, arrays.quad, arrays.bi)]))
+    return keys[(keys >= 0) & (keys < (1 << 24))].astype(np.int32)
+
+
+def vocab_fingerprint(vocab: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(vocab).tobytes()) \
+        .hexdigest()[:16]
+
+
+@dataclass(frozen=True)
+class IndexPartial:
+    """One chunk's device-built index slice (CSR over the chunk)."""
+
+    counts: np.ndarray        # int64[n_roots]
+    docs: np.ndarray          # int32[n_postings]
+    positions: np.ndarray     # int32[n_postings]
+
+    @property
+    def n_postings(self) -> int:
+        return int(self.docs.shape[0])
+
+
+@dataclass(frozen=True)
+class RootIndex:
+    """The merged inverted index: root r's postings (sorted by global
+    word order) sit at ``docs/positions[offsets[r] : offsets[r] +
+    counts[r]]``; ``root_keys`` maps r back to its packed key."""
+
+    root_keys: np.ndarray     # int32[n_roots] sorted packed keys
+    counts: np.ndarray        # int64[n_roots]
+    offsets: np.ndarray       # int64[n_roots] exclusive cumsum
+    docs: np.ndarray          # int32[n_postings]
+    positions: np.ndarray     # int32[n_postings]
+    dict_versions: tuple = () # DictStore version pinned per chunk
+
+    @property
+    def n_roots(self) -> int:
+        return int(self.root_keys.shape[0])
+
+    @property
+    def n_postings(self) -> int:
+        return int(self.docs.shape[0])
+
+    def postings_for(self, root) -> tuple[np.ndarray, np.ndarray]:
+        """Packed key (or root string, e.g. "كتب") -> (docs, positions)."""
+        key = (ab.pack_key(ab.encode_word(root)) if isinstance(root, str)
+               else int(root))
+        r = int(np.searchsorted(self.root_keys, key))
+        if r >= self.n_roots or self.root_keys[r] != key:
+            return (np.zeros(0, np.int32), np.zeros(0, np.int32))
+        lo, hi = int(self.offsets[r]), int(self.offsets[r] + self.counts[r])
+        return self.docs[lo:hi], self.positions[lo:hi]
+
+
+def merge_partials(partials, root_keys: np.ndarray,
+                   dict_versions=()) -> RootIndex:
+    """Concatenate per-chunk CSR partials into one RootIndex.
+
+    Chunks cover consecutive word ranges, so within a root the merged
+    postings are just each chunk's run back to back — computed with one
+    searchsorted + scatter per chunk (vectorised over its postings).
+    """
+    n_roots = root_keys.shape[0]
+    counts = np.zeros(n_roots, np.int64)
+    for p in partials:
+        counts += p.counts
+    offsets = np.cumsum(counts) - counts
+    total = int(counts.sum())
+    docs = np.zeros(total, np.int32)
+    positions = np.zeros(total, np.int32)
+    base = np.zeros(n_roots, np.int64)
+    for p in partials:
+        ends = np.cumsum(p.counts)
+        j = np.arange(p.n_postings, dtype=np.int64)
+        rid = np.searchsorted(ends, j, side="right")
+        dest = offsets[rid] + base[rid] + (j - (ends[rid] - p.counts[rid]))
+        docs[dest] = p.docs
+        positions[dest] = p.positions
+        base += p.counts
+    return RootIndex(root_keys=root_keys, counts=counts, offsets=offsets,
+                     docs=docs, positions=positions,
+                     dict_versions=tuple(dict_versions))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint plumbing
+# ---------------------------------------------------------------------------
+def _chunk_path(ckpt_dir: str, i: int) -> str:
+    return os.path.join(ckpt_dir, f"chunk_{i:06d}.npz")
+
+
+def _write_manifest(ckpt_dir: str, manifest: dict) -> None:
+    tmp = os.path.join(ckpt_dir, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, os.path.join(ckpt_dir, "manifest.json"))
+
+
+def _load_manifest(ckpt_dir: str) -> dict | None:
+    path = os.path.join(ckpt_dir, "manifest.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _load_partial(ckpt_dir: str, i: int) -> IndexPartial:
+    with np.load(_chunk_path(ckpt_dir, i)) as z:
+        return IndexPartial(counts=z["counts"].astype(np.int64),
+                            docs=z["docs"], positions=z["positions"])
+
+
+# ---------------------------------------------------------------------------
+# the driver
+# ---------------------------------------------------------------------------
+def build_corpus_index(stream, roots, *, mesh=None, checkpoint_dir=None,
+                       resume: bool = False, block_b: int = 2048,
+                       block_w: int = 2048, interpret: bool | None = None,
+                       **stem_kw) -> RootIndex:
+    """Stream of ``core.corpus.CorpusChunk`` -> merged :class:`RootIndex`.
+
+    ``roots`` is a RootDictArrays, a ResolvedRootDict handle, or a live
+    ``serve.DictStore`` — with a store, each chunk pins
+    ``store.acquire()`` for its stemming launch and records the pinned
+    version in the checkpoint manifest (the index vocabulary itself is
+    frozen at build start, so mid-build publishes change *stemming* but
+    never the id space). ``mesh`` shards every chunk over its ``data``
+    axis. ``checkpoint_dir`` + ``resume`` give chunk-granular restart
+    with bit-identical results.
+    """
+    from repro.kernels import ops  # lazy: keep index importable sans jax
+
+    store = roots if hasattr(roots, "acquire") else None
+    pinned = store.acquire().handle if store else roots
+    vocab = build_vocab(pinned)
+    fp = vocab_fingerprint(vocab)
+
+    done: list[IndexPartial] = []
+    versions: list[int] = []
+    manifest = None
+    if checkpoint_dir:
+        os.makedirs(checkpoint_dir, exist_ok=True)
+        if resume:
+            manifest = _load_manifest(checkpoint_dir)
+        if manifest is not None:
+            if manifest["schema"] != MANIFEST_SCHEMA:
+                raise ValueError(
+                    f"checkpoint schema {manifest['schema']} !="
+                    f" {MANIFEST_SCHEMA}")
+            if manifest["vocab"] != fp:
+                raise ValueError(
+                    "checkpoint was built against a different vocabulary"
+                    f" ({manifest['vocab']} != {fp}) — refusing to resume")
+        else:
+            manifest = {"schema": MANIFEST_SCHEMA, "vocab": fp,
+                        "n_roots": int(vocab.shape[0]), "chunks": []}
+    n_ckpt = len(manifest["chunks"]) if manifest else 0
+
+    for i, ch in enumerate(stream):
+        if i < n_ckpt:
+            rec = manifest["chunks"][i]
+            if rec["start_word"] != ch.start_word or \
+                    rec["n_words"] != ch.n_words:
+                raise ValueError(
+                    f"resumed stream diverges at chunk {i}: checkpoint"
+                    f" covers words [{rec['start_word']},"
+                    f" +{rec['n_words']}), stream yields"
+                    f" [{ch.start_word}, +{ch.n_words})")
+            done.append(_load_partial(checkpoint_dir, i))
+            versions.append(rec["dict_version"])
+            continue
+        dv = store.acquire() if store else None
+        handle = dv.handle if dv else roots
+        counts, docs, poss, n_post = ops.build_root_index(
+            ch.words, handle, vocab, ch.doc_ids, ch.positions, mesh=mesh,
+            block_b=block_b, block_w=block_w, interpret=interpret,
+            **stem_kw)
+        n_post = int(n_post)
+        part = IndexPartial(counts=np.asarray(counts).astype(np.int64),
+                            docs=np.asarray(docs[:n_post]),
+                            positions=np.asarray(poss[:n_post]))
+        done.append(part)
+        versions.append(dv.version if dv else 0)
+        if checkpoint_dir:
+            np.savez(_chunk_path(checkpoint_dir, i),
+                     counts=part.counts, docs=part.docs,
+                     positions=part.positions)
+            manifest["chunks"].append({
+                "i": i, "start_word": int(ch.start_word),
+                "n_words": int(ch.n_words), "n_postings": part.n_postings,
+                "dict_version": versions[-1]})
+            _write_manifest(checkpoint_dir, manifest)
+    return merge_partials(done, vocab, dict_versions=versions)

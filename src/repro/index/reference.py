@@ -1,0 +1,54 @@
+"""Host numpy reference for the inverted-index build.
+
+The trust chain mirrors every other parity suite in the repo: stemming
+truth comes from ``core.stemmer.stem_batch`` (the reference the
+megakernel is bit-identical to since PR 1), and the postings build is
+plain vectorised numpy — ``bincount`` for the per-root counts and one
+stable ``argsort`` for the CSR postings layout. The device build
+(kernels/postings.py sort + segment-reduce + scatter) must reproduce
+this bit for bit: same counts, same postings, same within-root order
+(global word index).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pyref
+from repro.core import stemmer as core_stemmer
+
+
+def host_root_ids(words: np.ndarray, arrays, vocab: np.ndarray, *,
+                  chunk: int = 65536) -> np.ndarray:
+    """words int32[W, 16] -> vocab ids int32[W] via the reference stemmer.
+
+    Chunked so multi-million-word corpora don't materialise one giant
+    intermediate; unmatched words get the drop id ``len(vocab)``.
+    """
+    n_roots = len(vocab)
+    out = np.empty(words.shape[0], np.int32)
+    for i in range(0, words.shape[0], chunk):
+        w = jnp.asarray(words[i:i + chunk])
+        root, source = core_stemmer.stem_batch(w, arrays)
+        key = np.asarray(core_stemmer.pack_keys(root))
+        source = np.asarray(source)
+        at = np.searchsorted(vocab, key)
+        found = vocab[np.minimum(at, n_roots - 1)] == key
+        out[i:i + chunk] = np.where(found & (source != pyref.SRC_NONE),
+                                    at, n_roots)
+    return out
+
+
+def host_index(ids: np.ndarray, doc_ids: np.ndarray, positions: np.ndarray,
+               n_roots: int):
+    """(ids, doc, pos) -> (counts int64[n_roots], docs, poss) CSR arrays.
+
+    One stable argsort over the root ids keeps postings within a root in
+    global word order — the layout :func:`repro.kernels.postings.
+    finish_postings` produces on device.
+    """
+    valid = ids < n_roots
+    order = np.argsort(ids[valid], kind="stable")
+    counts = np.bincount(ids[valid], minlength=n_roots).astype(np.int64)
+    return counts, doc_ids[valid][order].astype(np.int32), \
+        positions[valid][order].astype(np.int32)

@@ -252,6 +252,206 @@ def extract_roots_sharded(words, roots, mesh, *, axis: str = "data",
                        interpret=interpret)
 
 
+# ---------------------------------------------------------------------------
+# Corpus indexing: stemmer megakernel -> postings reduction, one jit scope
+# ---------------------------------------------------------------------------
+def _root_ids(root, source, vocab):
+    """(root[W,4], source[W]) -> vocab ids int32[W]; unmatched/padding
+    words get the drop bucket id ``n_roots = vocab.shape[0]``."""
+    n_roots = vocab.shape[0]
+    key = core_stemmer.pack_keys(root)
+    idx = jnp.searchsorted(vocab, key).astype(jnp.int32)
+    found = (jnp.take(vocab, jnp.minimum(idx, n_roots - 1), mode="clip")
+             == key)
+    valid = found & (source != pyref.SRC_NONE)
+    return jnp.where(valid, idx, n_roots)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("infix", "match", "block_b", "residency",
+                     "dict_block_r", "num_buffers", "skip_index",
+                     "visit_budget", "block_w", "interpret"))
+def _index_jit(words, roots, vocab, doc_ids, positions, *, infix, match,
+               block_b, residency, dict_block_r, num_buffers, skip_index,
+               visit_budget, block_w, interpret):
+    from repro.kernels import postings as pk
+
+    root, source = sf.stem_fused_pallas(
+        words, roots, infix=infix, match=match, block_b=block_b,
+        residency=residency, dict_block_r=dict_block_r,
+        num_buffers=num_buffers, skip_index=skip_index,
+        visit_budget=visit_budget, interpret=interpret)
+    ids = _root_ids(root, source, vocab)
+    hist, rank = pk.postings_pallas(ids, n_roots=vocab.shape[0],
+                                    block_w=block_w, interpret=interpret)
+    return pk.finish_postings(hist, rank, ids, doc_ids, positions,
+                              n_roots=vocab.shape[0], block_w=block_w)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "infix", "match", "block_b",
+                     "residency", "dict_block_r", "num_buffers",
+                     "skip_index", "visit_budget", "block_w", "interpret"))
+def _index_sharded_jit(words, roots, vocab, doc_ids, positions, *, mesh,
+                       axis, infix, match, block_b, residency, dict_block_r,
+                       num_buffers, skip_index, visit_budget, block_w,
+                       interpret):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import mesh_axis_size
+    from repro.kernels import postings as pk
+
+    n_dev = mesh_axis_size(mesh, axis)
+    w = words.shape[0]
+    # per-device slices must be whole postings tiles so the stacked
+    # per-shard (tile, root) histograms keep global corpus order
+    pad = (-w) % (n_dev * block_w)
+    wp = jnp.pad(words, ((0, pad), (0, 0)))   # zero rows -> SRC_NONE -> drop
+
+    def local(wds, r, v):
+        root, source = sf.stem_fused_pallas(
+            wds, r, infix=infix, match=match, block_b=block_b,
+            residency=residency, dict_block_r=dict_block_r,
+            num_buffers=num_buffers, skip_index=skip_index,
+            visit_budget=visit_budget, interpret=interpret)
+        ids = _root_ids(root, source, v)
+        hist, rank = pk.postings_pallas(ids, n_roots=v.shape[0],
+                                        block_w=block_w, interpret=interpret)
+        return hist, rank, ids
+
+    f = shard_map(local, mesh=mesh, in_specs=(P(axis), P(), P()),
+                  out_specs=(P(axis), P(axis), P(axis)), check_rep=False)
+    hist, rank, ids = f(wp, roots, vocab)
+    # the device-side shard merge: corpus shards are contiguous slices,
+    # so stacking per-shard tile histograms restores corpus tile order
+    # and the global exclusive cumsum in finish_postings *is* the merge
+    return pk.finish_postings(hist, rank, ids[:w], doc_ids, positions,
+                              n_roots=vocab.shape[0], block_w=block_w)
+
+
+def build_root_index(words, roots, vocab, doc_ids, positions, *,
+                     mesh=None, axis: str = "data", infix: bool = True,
+                     match: str = "bsearch", block_b: int = 2048,
+                     residency: str = "auto", dict_block_r: int = 8,
+                     num_buffers: int = 2, skip_index: bool = True,
+                     visit_budget: int | None = None, block_w: int = 2048,
+                     interpret: bool | None = None):
+    """One corpus chunk -> one inverted-index partial, fully on device.
+
+    words int32[W, 16], vocab int32[n_roots] (sorted packed root keys),
+    doc_ids/positions int32[W] -> ``(counts int32[n_roots],
+    docs int32[W_pad], poss int32[W_pad], n_postings int32)`` with root
+    r's postings at ``[excl_cumsum(counts)[r], +counts[r])``, sorted by
+    global word index (CSR layout; see kernels/postings.py).
+
+    Chains the stemmer megakernel straight into the postings reduction
+    kernel in ONE jit scope — roots/ids/histograms never visit the host,
+    the id map + cumsums + final scatter are XLA ops in the same scope
+    (the visit-index pattern), and there is no per-word host loop
+    anywhere. With ``mesh`` the word tiles shard over ``mesh[axis]``
+    (dictionaries + vocab replicated) and the per-shard (tile, root)
+    histograms merge device-side via the same exclusive cumsum that
+    merges tiles on one device. ``roots`` accepts plain RootDictArrays
+    or a ResolvedRootDict handle, as everywhere.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    kw = dict(infix=infix, match=match, block_b=block_b,
+              residency=residency, dict_block_r=dict_block_r,
+              num_buffers=num_buffers, skip_index=skip_index,
+              visit_budget=visit_budget, block_w=block_w,
+              interpret=interpret)
+    words = jnp.asarray(words, jnp.int32)
+    vocab = jnp.asarray(vocab, jnp.int32)
+    doc_ids = jnp.asarray(doc_ids, jnp.int32)
+    positions = jnp.asarray(positions, jnp.int32)
+    from repro.kernels import postings as pk
+
+    if mesh is None:
+        _count_dispatches(
+            sf.planned_launches(words.shape[0], roots, infix=infix,
+                                block_b=block_b, residency=residency,
+                                dict_block_r=dict_block_r,
+                                visit_budget=visit_budget)
+            + pk.postings_launches(words.shape[0], block_w=block_w))
+        return _index_jit(words, roots, vocab, doc_ids, positions, **kw)
+    from repro.dist import mesh_axis_size
+
+    n_dev = mesh_axis_size(mesh, axis)
+    per_dev = -(-words.shape[0] // n_dev) if words.shape[0] else 0
+    _count_dispatches(n_dev * (
+        sf.planned_launches(per_dev, roots, infix=infix, block_b=block_b,
+                            residency=residency, dict_block_r=dict_block_r,
+                            visit_budget=visit_budget)
+        + pk.postings_launches(per_dev, block_w=block_w)))
+    return _index_sharded_jit(words, roots, vocab, doc_ids, positions,
+                              mesh=mesh, axis=axis, **kw)
+
+
+def build_root_index_text(chars, roots, vocab, byte_off, *, doc0: int = 0,
+                          word0_of_doc0: int = 0, block_w_text: int = 128,
+                          max_words: int | None = None, block_w: int = 2048,
+                          interpret: bool | None = None, **stem_kw):
+    """Raw-text variant: codepoint tile + per-doc byte offsets -> the same
+    inverted-index partial as :func:`build_root_index`.
+
+    ``chars`` is a coalesced codepoint tile (textnorm.coalesce_docs),
+    ``byte_off`` int64[D] each document's first utf-8 byte offset in it.
+    Word->document attribution and in-document positions derive from the
+    front end's byte spans as XLA searchsorted/scatter ops in the same
+    jit scope — the byte stream goes in, postings come out, still no
+    per-word host work. ``doc0`` offsets emitted doc ids for chunked
+    corpora; ``word0_of_doc0`` is the global position of the chunk's
+    first word inside its (chunk-straddling) first document, 0 when
+    documents never straddle chunks.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    root, source, spans, n_words = extract_roots_text(
+        chars, roots, block_w=block_w_text, max_words=max_words,
+        interpret=interpret, **stem_kw)
+    from repro.kernels import postings as pk
+
+    _count_dispatches(pk.postings_launches(root.shape[0], block_w=block_w))
+    # doc0 / word0_of_doc0 ride as traced scalars so chunked corpora
+    # replay one trace per tile shape instead of one per chunk
+    return _finish_index_text(root, source, spans, n_words, vocab,
+                              jnp.asarray(byte_off),
+                              jnp.int32(doc0), jnp.int32(word0_of_doc0),
+                              block_w=block_w, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def _finish_index_text(root, source, spans, n_words, vocab, byte_off,
+                       doc0, word0_of_doc0, *, block_w, interpret):
+    from repro.kernels import postings as pk
+
+    wp = root.shape[0]
+    arange = jnp.arange(wp, dtype=jnp.int32)
+    in_tile = arange < n_words
+    # byte span start -> owning document (serve/text.py retire path)
+    doc_local = (jnp.searchsorted(byte_off, spans[:, 0].astype(byte_off.dtype),
+                                  side="right") - 1).astype(jnp.int32)
+    doc_local = jnp.maximum(doc_local, 0)
+    # first word index per document via scatter-min (invalid rows carry
+    # arange >= n_words, so they never win the min)
+    n_docs = byte_off.shape[0]
+    first = jnp.full((n_docs,), wp, jnp.int32).at[doc_local].min(
+        arange, mode="drop")
+    positions = arange - jnp.take(first, doc_local, mode="clip")
+    positions = jnp.where(doc_local == 0, positions + word0_of_doc0,
+                          positions)
+    ids = _root_ids(root, source, vocab)
+    ids = jnp.where(in_tile, ids, vocab.shape[0])
+    hist, rank = pk.postings_pallas(ids, n_roots=vocab.shape[0],
+                                    block_w=block_w, interpret=interpret)
+    return pk.finish_postings(hist, rank, ids, doc_local + doc0, positions,
+                              n_roots=vocab.shape[0], block_w=block_w)
+
+
 @functools.partial(jax.jit, static_argnames=("infix", "interpret"))
 def extract_roots_multilaunch(words, roots, *, infix: bool = True,
                               interpret: bool | None = None):

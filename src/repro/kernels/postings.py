@@ -1,0 +1,196 @@
+"""Pallas TPU kernel: the inverted-index postings reduction.
+
+The corpus indexer (repro.index) needs root -> (doc, position) postings
+for millions of words without a host loop. The classic device recipe is
+sort + segment-reduce + scatter, and this kernel runs the per-tile half
+of it on the accelerator:
+
+  * each grid step takes one ``block_w``-word tile of root ids and sorts
+    the composite keys ``id * block_w + lane`` with an in-register
+    bitonic network (block_w is a power of two, so the network is a
+    static ``log2^2`` cascade of predicated compare-exchanges — no data-
+    dependent control flow, same discipline as ``stem_match.bsearch_hit``);
+  * bucket boundaries then fall out of a branchless lower-bound search:
+    ``log2(block_w)`` bisection steps per query give the per-tile root
+    histogram (segment reduce) and, re-run at each word's own composite
+    key, its stable rank within its root segment.
+
+Histograms and ranks are tiny next to the word stream, so the global
+side of the reduction — exclusive cumsums over (tile, root) and the
+final scatter of (doc, position) pairs into the postings array — runs as
+XLA ops in the same jit scope (:func:`finish_postings`), exactly the
+PR 5/PR 7 visit-index pattern: scatters in XLA, dense per-word work in
+the kernel. Composite keys make the sort stable in (tile, lane) order,
+so postings within a root come out sorted by global word index with no
+tie-breaking pass.
+
+Invalid words (no root found, padding) are assigned the drop bucket
+``id == n_roots``; their scatter destinations land out of bounds and
+``mode="drop"`` discards them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.stem_match import _ceil_log2
+
+LANE = 128
+
+# int32 composite keys: id * block_w + lane must not overflow.
+MAX_COMPOSITE = 1 << 31
+
+
+def _iota(n: int) -> jnp.ndarray:
+    """int32[n] 0..n-1 (2D broadcasted_iota — TPU has no 1D iota)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (1, n), 1).reshape(n)
+
+
+def _bitonic_sort(keys: jnp.ndarray) -> jnp.ndarray:
+    """Ascending bitonic sort of int32[n], n a power of two.
+
+    Fully static network: log2(n)*(log2(n)+1)/2 vectorised compare-
+    exchange stages, each a gather at the lane's partner (``lane ^ j``)
+    plus a predicated min/max select — branchless, like the bsearch.
+    """
+    n = keys.shape[0]
+    lane = _iota(n)
+    for k in (1 << s for s in range(1, _ceil_log2(n) + 1)):
+        j = k // 2
+        while j:
+            partner = jnp.take(keys, lane ^ j, mode="clip")
+            up = (lane & k) == 0          # ascending run?
+            low = (lane & j) == 0         # lower end of the exchange?
+            keys = jnp.where(up == low, jnp.minimum(keys, partner),
+                             jnp.maximum(keys, partner))
+            j //= 2
+    return keys
+
+
+def _lower_bound(sorted_keys: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Count of elements in sorted int32[n] (n pow2) strictly below q.
+
+    Branchless: ceil(log2 n) predicated bisection steps (the
+    ``bsearch_hit`` discipline), then one final adjust for the
+    everything-smaller case.
+    """
+    n = sorted_keys.shape[0]
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, n - 1, jnp.int32)
+    for _ in range(_ceil_log2(n)):
+        mid = (lo + hi) // 2
+        v = jnp.take(sorted_keys, mid, mode="clip")
+        ge = v >= q
+        hi = jnp.where(ge, mid, hi)
+        lo = jnp.where(ge, lo, mid + 1)
+    return lo + (jnp.take(sorted_keys, lo, mode="clip") < q)
+
+
+def _postings_kernel(ids_ref, hist_ref, rank_ref, *, block_w, n_roots_pad):
+    """Grid (n_tiles,): one word tile -> (root histogram, in-segment rank).
+
+    Composite keys ``id * block_w + lane`` are unique, so the bitonic
+    sort needs no stability of its own and the rank of word ``lane`` is
+    simply its key's position minus its root segment's start.
+    """
+    ids = ids_ref[0, :]                                     # (block_w,)
+    lane = _iota(block_w)
+    keys = ids * block_w + lane
+    skeys = _bitonic_sort(keys)
+    # segment boundaries at every bucket start r * block_w (one extra
+    # query closes the last bucket)
+    bounds = _lower_bound(skeys, _iota(n_roots_pad + 1) * block_w)
+    hist_ref[0, :] = (bounds[1:] - bounds[:-1]).astype(jnp.int32)
+    seg_start = jnp.take(bounds, ids, mode="clip")
+    rank_ref[0, :] = _lower_bound(skeys, keys) - seg_start
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_roots", "block_w", "interpret"))
+def postings_pallas(ids: jnp.ndarray, *, n_roots: int, block_w: int = 2048,
+                    interpret: bool = False):
+    """Tile-local postings reduction: root ids -> (hist, rank).
+
+    ids int32[W] in [0, n_roots] (== n_roots marks the drop bucket) ->
+      hist int32[n_tiles, n_roots + 1]  per-tile root histogram
+      rank int32[W_pad]                 stable rank within (tile, root)
+
+    W pads up to a ``block_w`` multiple with drop-bucket ids. One
+    pallas_call, grid over word tiles; combine across tiles (and shards)
+    with :func:`finish_postings`.
+    """
+    if block_w & (block_w - 1):
+        raise ValueError(f"block_w must be a power of two, got {block_w}")
+    n_roots_pad = n_roots + 1                  # +1: the drop bucket
+    if n_roots_pad * block_w >= MAX_COMPOSITE:
+        raise ValueError(
+            f"composite sort keys overflow int32: ({n_roots} roots + drop)"
+            f" * block_w {block_w} >= 2^31 — lower block_w")
+    w = ids.shape[0]
+    pad = (-w) % block_w
+    ids_p = jnp.pad(ids.astype(jnp.int32), (0, pad),
+                    constant_values=n_roots).reshape(-1, block_w)
+    n_tiles = ids_p.shape[0]
+    hist, rank = pl.pallas_call(
+        functools.partial(_postings_kernel, block_w=block_w,
+                          n_roots_pad=n_roots_pad),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((1, block_w), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, n_roots_pad), lambda i: (i, 0)),
+                   pl.BlockSpec((1, block_w), lambda i: (i, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, n_roots_pad), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, block_w), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids_p)
+    return hist, rank.reshape(-1)
+
+
+def postings_launches(n_words: int, *, block_w: int = 2048) -> int:
+    """pallas_call dispatches one :func:`postings_pallas` call issues —
+    always 1 (the grid spans every word tile), 0 for an empty batch."""
+    return 1 if n_words else 0
+
+
+def finish_postings(hist, rank, ids, doc_ids, positions, *, n_roots: int,
+                    block_w: int):
+    """Global half of the reduction: cumsums + the postings scatter.
+
+    hist int32[n_tiles, n_roots+1], rank int32[W_pad] from one or more
+    :func:`postings_pallas` calls over *consecutive* word tiles (the
+    sharded path stacks per-shard tiles in corpus order, which makes the
+    shard merge the same exclusive cumsum as the tile merge); ids
+    int32[W], doc_ids/positions int32[W] aligned with it.
+
+    Returns ``(counts int32[n_roots], docs int32[W_pad],
+    poss int32[W_pad], n_postings int32)`` — per-root posting counts,
+    and the postings arrays laid out CSR-style: root r's postings occupy
+    ``[offsets[r], offsets[r] + counts[r])`` with
+    ``offsets = exclusive_cumsum(counts)``, sorted by global word index.
+    Entries at and past ``n_postings`` are zero. Pure XLA (cumsums, one
+    gather, two scatters) — no per-word host loop.
+    """
+    w = ids.shape[0]
+    w_pad = rank.shape[0]
+    # per-(tile, root) base: how many of root r landed in earlier tiles
+    tile_base = jnp.cumsum(hist, axis=0) - hist          # exclusive, axis 0
+    counts = hist.sum(axis=0)[:n_roots]
+    offsets = jnp.cumsum(counts) - counts                # exclusive
+    n_postings = counts.sum()
+
+    tile_of = _iota(w) // block_w
+    safe_ids = jnp.minimum(ids, n_roots)                 # gather-safe
+    base = (jnp.take(jnp.concatenate([offsets, n_postings[None]]), safe_ids,
+                     mode="clip")
+            + tile_base[tile_of, safe_ids] + rank[:w])
+    # drop bucket -> out of bounds -> mode="drop" discards
+    dest = jnp.where(safe_ids < n_roots, base, w_pad)
+    docs = jnp.zeros((w_pad,), jnp.int32).at[dest].set(
+        doc_ids.astype(jnp.int32), mode="drop")
+    poss = jnp.zeros((w_pad,), jnp.int32).at[dest].set(
+        positions.astype(jnp.int32), mode="drop")
+    return counts, docs, poss, n_postings

@@ -1,0 +1,305 @@
+"""Corpus indexing: streams, the postings kernel, the chunked driver.
+
+Parity discipline matches the rest of the suite: the device index build
+(megakernel -> postings reduction -> scatter) must be bit-identical to
+the host numpy reference (stem_batch ids + stable argsort) — same
+per-root counts, same postings, same within-root (global word) order —
+including at the 1M-word acceptance scale, and a checkpoint/resume
+split must reproduce the same index.
+"""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import index as ix
+from repro.core import corpus, stemmer
+from repro.core import textnorm as tn
+from repro.kernels import ops
+from repro.kernels import postings as pk
+
+
+@pytest.fixture(scope="module")
+def table():
+    return corpus.build_token_table(forms_per_root=6)
+
+
+@pytest.fixture(scope="module")
+def dict_and_vocab():
+    d = corpus.build_dictionary(n_tri=300, n_quad=40, seed=0)
+    arrays = stemmer.RootDictArrays.from_rootdict(d)
+    return arrays, ix.build_vocab(arrays)
+
+
+def _host(arrays, vocab, chunks):
+    words = np.concatenate([c.words for c in chunks])
+    docs = np.concatenate([c.doc_ids for c in chunks]).astype(np.int32)
+    poss = np.concatenate([c.positions for c in chunks])
+    ids = ix.host_root_ids(words, arrays, vocab)
+    return ix.host_index(ids, docs, poss, len(vocab))
+
+
+def _assert_index_equal(idx, want):
+    want_counts, want_docs, want_poss = want
+    np.testing.assert_array_equal(idx.counts, want_counts)
+    np.testing.assert_array_equal(idx.docs, want_docs)
+    np.testing.assert_array_equal(idx.positions, want_poss)
+
+
+# ---------------------------------------------------------------------------
+# corpus streams
+# ---------------------------------------------------------------------------
+def test_stream_determinism(table):
+    a = list(corpus.stream_corpus_words(5000, seed=9, chunk_words=2048,
+                                        table=table))
+    b = list(corpus.stream_corpus_words(5000, seed=9, chunk_words=2048,
+                                        table=table))
+    assert len(a) == len(b) == 3
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.words, y.words)
+        np.testing.assert_array_equal(x.doc_ids, y.doc_ids)
+        np.testing.assert_array_equal(x.positions, y.positions)
+    c = next(corpus.stream_corpus_words(5000, seed=10, chunk_words=2048,
+                                        table=table))
+    assert not np.array_equal(a[0].words, c.words)
+
+
+def test_stream_chunks_are_seeded_independently(table):
+    """Chunk c depends on (seed, c) alone — a resumed build can skip
+    ahead without replaying earlier chunks' rng draws."""
+    full = list(corpus.stream_corpus_words(6000, seed=4, chunk_words=2048,
+                                           table=table))
+    tail = list(corpus.stream_corpus_words(6000, seed=4, chunk_words=2048,
+                                           table=table))[2:]
+    np.testing.assert_array_equal(full[2].words, tail[0].words)
+    # doc ids / positions are functions of the global word index
+    ch = full[1]
+    gwi = ch.start_word + np.arange(ch.n_words)
+    np.testing.assert_array_equal(ch.doc_ids, gwi // 1000)
+    np.testing.assert_array_equal(ch.positions, gwi % 1000)
+
+
+def test_stream_docs_roundtrip_frontend(table):
+    """Generated text must round-trip the PR 7 normalisation tables: the
+    python front end on the rendered documents reproduces exactly the
+    word rows the fast path emits."""
+    wchunks = list(corpus.stream_corpus_words(600, seed=5, chunk_words=300,
+                                              words_per_doc=50, table=table))
+    dchunks = list(corpus.stream_corpus_docs(600, seed=5, chunk_words=300,
+                                             words_per_doc=50, table=table))
+    for wc, (doc0, docs) in zip(wchunks, dchunks):
+        assert doc0 == wc.doc_ids[0]
+        got = np.concatenate([tn.analyze_text_py(doc)[0] for doc in docs])
+        np.testing.assert_array_equal(got, wc.words)
+
+
+def test_stream_docs_rejects_straddling_chunks(table):
+    with pytest.raises(ValueError, match="multiple"):
+        next(corpus.stream_corpus_docs(600, chunk_words=300,
+                                       words_per_doc=77, table=table))
+
+
+# ---------------------------------------------------------------------------
+# the postings reduction kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("block_w", [128, 256])
+def test_postings_kernel_vs_numpy(block_w):
+    rng = np.random.default_rng(0)
+    n_roots, w = 53, 1000           # ragged: pads up with drop ids
+    ids = rng.integers(0, n_roots + 1, size=w).astype(np.int32)
+    docs = rng.integers(0, 40, size=w).astype(np.int32)
+    poss = np.arange(w, dtype=np.int32)
+    hist, rank = pk.postings_pallas(jnp.asarray(ids), n_roots=n_roots,
+                                    block_w=block_w, interpret=True)
+    counts, d_out, p_out, n_post = map(np.asarray, pk.finish_postings(
+        hist, rank, jnp.asarray(ids), jnp.asarray(docs), jnp.asarray(poss),
+        n_roots=n_roots, block_w=block_w))
+    valid = ids < n_roots
+    order = np.argsort(ids[valid], kind="stable")
+    np.testing.assert_array_equal(counts,
+                                  np.bincount(ids[valid],
+                                              minlength=n_roots))
+    assert int(n_post) == int(valid.sum())
+    np.testing.assert_array_equal(d_out[:n_post], docs[valid][order])
+    np.testing.assert_array_equal(p_out[:n_post], poss[valid][order])
+    # per-tile histograms must partition the padded words
+    assert int(np.asarray(hist).sum()) == -(-w // block_w) * block_w
+
+
+def test_postings_kernel_all_dropped():
+    ids = jnp.full((200,), 7, jnp.int32)       # everything in the drop bucket
+    hist, rank = pk.postings_pallas(ids, n_roots=7, block_w=128,
+                                    interpret=True)
+    counts, _, _, n_post = pk.finish_postings(
+        hist, rank, ids, jnp.zeros(200, jnp.int32),
+        jnp.zeros(200, jnp.int32), n_roots=7, block_w=128)
+    assert int(n_post) == 0
+    assert int(jnp.sum(counts)) == 0
+
+
+def test_postings_kernel_validation():
+    ids = jnp.zeros((8,), jnp.int32)
+    with pytest.raises(ValueError, match="power of two"):
+        pk.postings_pallas(ids, n_roots=4, block_w=96, interpret=True)
+    with pytest.raises(ValueError, match="overflow"):
+        pk.postings_pallas(ids, n_roots=1 << 22, block_w=1024,
+                           interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# ops.build_root_index: words path and text path
+# ---------------------------------------------------------------------------
+def test_build_root_index_matches_host(dict_and_vocab, table):
+    arrays, vocab = dict_and_vocab
+    chunks = list(corpus.stream_corpus_words(3000, seed=2, chunk_words=3000,
+                                             words_per_doc=200, table=table))
+    (ch,) = chunks
+    counts, docs, poss, n_post = ops.build_root_index(
+        ch.words, arrays, vocab, ch.doc_ids, ch.positions, block_b=256,
+        block_w=256)
+    n_post = int(n_post)
+    want_counts, want_docs, want_poss = _host(arrays, vocab, chunks)
+    np.testing.assert_array_equal(np.asarray(counts), want_counts)
+    np.testing.assert_array_equal(np.asarray(docs)[:n_post], want_docs)
+    np.testing.assert_array_equal(np.asarray(poss)[:n_post], want_poss)
+
+
+def test_text_path_matches_words_path(dict_and_vocab, table):
+    arrays, vocab = dict_and_vocab
+    n, wpd = 1200, 60
+    wc = next(corpus.stream_corpus_words(n, seed=6, chunk_words=n,
+                                         words_per_doc=wpd, table=table))
+    doc0, docs = next(corpus.stream_corpus_docs(n, seed=6, chunk_words=n,
+                                                words_per_doc=wpd,
+                                                table=table))
+    chars, _, byte_off = tn.coalesce_docs(docs)
+    got = ops.build_root_index_text(chars, arrays, vocab, byte_off,
+                                    doc0=doc0, block_b=256, block_w=512)
+    want = ops.build_root_index(wc.words, arrays, vocab, wc.doc_ids,
+                                wc.positions, block_b=256, block_w=512)
+    n_post = int(want[3])
+    assert int(got[3]) == n_post
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1])[:n_post],
+                                  np.asarray(want[1])[:n_post])
+    np.testing.assert_array_equal(np.asarray(got[2])[:n_post],
+                                  np.asarray(want[2])[:n_post])
+
+
+# ---------------------------------------------------------------------------
+# the chunked driver: checkpoint / resume / DictStore pinning
+# ---------------------------------------------------------------------------
+def _stream(table, n=12000, chunk=4096, seed=3):
+    return corpus.stream_corpus_words(n, seed=seed, chunk_words=chunk,
+                                      words_per_doc=500, table=table)
+
+
+def test_builder_parity_and_merge(dict_and_vocab, table):
+    arrays, vocab = dict_and_vocab
+    idx = ix.build_corpus_index(_stream(table), arrays, block_b=512,
+                                block_w=512)
+    _assert_index_equal(idx, _host(arrays, vocab, list(_stream(table))))
+    np.testing.assert_array_equal(idx.offsets,
+                                  np.cumsum(idx.counts) - idx.counts)
+    assert idx.n_postings == int(idx.counts.sum())
+
+
+def test_checkpoint_resume_bit_identical(dict_and_vocab, table, tmp_path):
+    arrays, _ = dict_and_vocab
+    full = ix.build_corpus_index(_stream(table), arrays, block_b=512,
+                                 block_w=512)
+    # complete 2 of 3 chunks, "crash", then resume over the full stream
+    ckpt = str(tmp_path / "ckpt")
+    ix.build_corpus_index(itertools.islice(_stream(table), 2), arrays,
+                          checkpoint_dir=ckpt, block_b=512, block_w=512)
+    resumed = ix.build_corpus_index(_stream(table), arrays,
+                                    checkpoint_dir=ckpt, resume=True,
+                                    block_b=512, block_w=512)
+    np.testing.assert_array_equal(resumed.counts, full.counts)
+    np.testing.assert_array_equal(resumed.docs, full.docs)
+    np.testing.assert_array_equal(resumed.positions, full.positions)
+    assert resumed.dict_versions == (0, 0, 0)
+
+
+def test_resume_rejects_divergent_stream(dict_and_vocab, table, tmp_path):
+    arrays, _ = dict_and_vocab
+    ckpt = str(tmp_path / "ckpt")
+    ix.build_corpus_index(itertools.islice(_stream(table), 1), arrays,
+                          checkpoint_dir=ckpt, block_b=512, block_w=512)
+    other = corpus.stream_corpus_words(12000, seed=3, chunk_words=2048,
+                                       words_per_doc=500, table=table)
+    with pytest.raises(ValueError, match="diverges"):
+        ix.build_corpus_index(other, arrays, checkpoint_dir=ckpt,
+                              resume=True, block_b=512, block_w=512)
+
+
+def test_resume_rejects_vocab_mismatch(dict_and_vocab, table, tmp_path):
+    arrays, _ = dict_and_vocab
+    ckpt = str(tmp_path / "ckpt")
+    ix.build_corpus_index(itertools.islice(_stream(table), 1), arrays,
+                          checkpoint_dir=ckpt, block_b=512, block_w=512)
+    grown = corpus.grow_root_arrays(arrays, 4096, seed=1)
+    with pytest.raises(ValueError, match="vocabulary"):
+        ix.build_corpus_index(_stream(table), grown, checkpoint_dir=ckpt,
+                              resume=True, block_b=512, block_w=512)
+
+
+def test_builder_records_dictstore_versions(dict_and_vocab, table):
+    from repro.serve import DictStore
+
+    arrays, _ = dict_and_vocab
+    store = DictStore(arrays)
+    chunks = list(_stream(table))
+
+    def publishing_stream():
+        for i, ch in enumerate(chunks):
+            if i == 1:        # a publish lands between chunks 0 and 1
+                store.publish(corpus.grow_root_arrays(arrays, 2048, seed=8))
+            yield ch
+
+    idx = ix.build_corpus_index(publishing_stream(), store, block_b=512,
+                                block_w=512)
+    assert idx.dict_versions == (0, 1, 1)
+    # chunk 0 stems under v0, later chunks under v1; host mirror per chunk
+    vocab = ix.build_vocab(arrays)
+    parts = []
+    for ch, v in zip(chunks, idx.dict_versions):
+        ids = ix.host_root_ids(ch.words, store.get(v).arrays, vocab)
+        parts.append(ix.IndexPartial(
+            *ix.host_index(ids, ch.doc_ids.astype(np.int32),
+                           ch.positions, len(vocab))))
+    want = ix.merge_partials(parts, vocab)
+    np.testing.assert_array_equal(idx.counts, want.counts)
+    np.testing.assert_array_equal(idx.docs, want.docs)
+    np.testing.assert_array_equal(idx.positions, want.positions)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance scale: >= 1M words, bit-identical to the host reference
+# ---------------------------------------------------------------------------
+def test_million_word_index_bit_identity():
+    d = corpus.build_dictionary(n_tri=2000, n_quad=200, seed=0)
+    arrays = stemmer.RootDictArrays.from_rootdict(d)
+    vocab = ix.build_vocab(arrays)
+    table = corpus.build_token_table()
+    n = 1 << 20                                    # 1,048,576 words
+
+    def stream():
+        return corpus.stream_corpus_words(n, seed=0, chunk_words=1 << 17,
+                                          words_per_doc=512, table=table)
+
+    idx = ix.build_corpus_index(stream(), arrays, block_b=2048,
+                                block_w=2048)
+    assert idx.n_postings > n // 2                 # the corpus is indexable
+    want_counts = np.zeros(len(vocab), np.int64)
+    parts = []
+    for ch in stream():
+        ids = ix.host_root_ids(ch.words, arrays, vocab)
+        parts.append(ix.IndexPartial(
+            *ix.host_index(ids, ch.doc_ids.astype(np.int32),
+                           ch.positions, len(vocab))))
+        want_counts += parts[-1].counts
+    want = ix.merge_partials(parts, vocab)
+    np.testing.assert_array_equal(idx.counts, want_counts)
+    _assert_index_equal(idx, (want.counts, want.docs, want.positions))

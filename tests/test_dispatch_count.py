@@ -1,0 +1,104 @@
+"""ops.dispatch_count() accounting across every launch path.
+
+The counter backs the launch_overhead benchmark and the megabatch CI
+check; these tests pin its semantics on the fused, sharded, persistent
+and index paths, and the *_order pair proves the conftest fixture
+isolates the counter between tests regardless of collection order.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import corpus, stemmer
+from repro.kernels import ops
+from repro.kernels import stem_fused as sf
+
+
+@pytest.fixture(scope="module")
+def small():
+    d = corpus.build_dictionary(n_tri=200, n_quad=30, seed=0)
+    arrays = stemmer.RootDictArrays.from_rootdict(d)
+    words, _, _ = corpus.build_corpus(n_words=96, seed=1)
+    return jnp.asarray(corpus.encode_corpus(words)), arrays
+
+
+def test_fused_counts_planned_launches(small):
+    enc, arrays = small
+    assert ops.dispatch_count() == 0
+    ops.extract_roots_fused(enc, arrays, block_b=32)
+    assert ops.dispatch_count() == sf.planned_launches(
+        enc.shape[0], arrays, block_b=32)
+    ops.extract_roots_fused(enc, arrays, block_b=32)
+    assert ops.dispatch_count() == 2 * sf.planned_launches(
+        enc.shape[0], arrays, block_b=32)
+
+
+def test_sharded_counts_per_device(small):
+    """The sharded wrapper books n_dev x the per-shard launch plan (a
+    1-device mesh in-process; the 4-device path is asserted in the
+    test_index_sharded subprocess)."""
+    from repro.launch import mesh as mesh_mod
+
+    enc, arrays = small
+    mesh = mesh_mod.make_data_mesh(1)
+    ops.extract_roots_sharded(enc, arrays, mesh, block_b=32)
+    assert ops.dispatch_count() == sf.planned_launches(
+        enc.shape[0], arrays, block_b=32)
+
+
+def test_persistent_counts_one_launch(small):
+    """Resident persistent serving = ONE descriptor-ring launch no
+    matter how many batch tiles it retires."""
+    enc, arrays = small
+    root, source, flags = ops.extract_roots_persistent(enc, arrays,
+                                                       block_b=32)
+    assert ops.dispatch_count() == 1
+    assert flags.shape[0] == -(-enc.shape[0] // 32)
+    want_r, want_s = stemmer.stem_batch(enc, arrays)
+    np.testing.assert_array_equal(np.asarray(root), np.asarray(want_r))
+    np.testing.assert_array_equal(np.asarray(source), np.asarray(want_s))
+
+
+def test_persistent_streamed_chunks_count(small):
+    """A streamed persistent launch whose visit table busts the SMEM
+    budget chunks into several dispatches — the counter must report the
+    actual chunk count, same as planned_launches."""
+    enc, arrays = small
+    grown = corpus.grow_root_arrays(arrays, 70_000, seed=3)
+    n_tiles = sf.dict_tile_count(grown, 8)
+    budget = 2 * n_tiles          # 2 batch tiles per chunk; 96/32 -> 2 calls
+    planned = sf.planned_launches(enc.shape[0], grown, block_b=32,
+                                  residency="streamed", persistent=True,
+                                  visit_budget=budget)
+    assert planned > 1
+    root, _, _ = ops.extract_roots_persistent(
+        enc, grown, block_b=32, residency="streamed", visit_budget=budget)
+    assert ops.dispatch_count() == planned
+    want_r, _ = stemmer.stem_batch(enc, grown)
+    np.testing.assert_array_equal(np.asarray(root), np.asarray(want_r))
+
+
+def test_index_counts_stemmer_plus_postings(small):
+    from repro import index as ix
+
+    enc, arrays = small
+    vocab = ix.build_vocab(arrays)
+    doc = np.zeros(enc.shape[0], np.int32)
+    pos = np.arange(enc.shape[0], dtype=np.int32)
+    ops.build_root_index(enc, arrays, vocab, doc, pos, block_b=32,
+                         block_w=32)
+    assert ops.dispatch_count() == sf.planned_launches(
+        enc.shape[0], arrays, block_b=32) + 1
+
+
+# -- the conftest fixture must isolate the counter between tests ---------
+# (pytest runs a module's tests in definition order: _a dirties the
+# counter, _b only passes if the autouse reset ran in between)
+def test_counter_isolation_order_a(small):
+    enc, arrays = small
+    ops.extract_roots_fused(enc, arrays, block_b=32)
+    assert ops.dispatch_count() > 0
+
+
+def test_counter_isolation_order_b():
+    assert ops.dispatch_count() == 0

@@ -1,0 +1,100 @@
+"""Sharded corpus indexing (4 forced host devices via subprocess — the
+main pytest session must keep the default single device).
+
+The acceptance bar from the corpus-indexing tentpole: a >= 1M-word
+synthetic corpus indexed over the ``("data",)`` mesh must be
+bit-identical to the host numpy reference build — same counts, same
+postings, same within-root order — with the per-shard partial indexes
+merged on device (the stacked tile histograms + global cumsum inside
+``ops.build_root_index``). Also pins the sharded path's
+``dispatch_count`` accounting at n_dev x (stemmer + postings) launches.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, numpy as np
+    from repro import index as ix
+    from repro.core import corpus, stemmer
+    from repro.kernels import ops
+    from repro.kernels import stem_fused as sf
+    from repro.launch import mesh as mesh_mod
+
+    assert len(jax.devices()) == 4
+    mesh = mesh_mod.make_data_mesh(4)
+    d = corpus.build_dictionary(n_tri=2000, n_quad=200, seed=0)
+    arrays = stemmer.RootDictArrays.from_rootdict(d)
+    vocab = ix.build_vocab(arrays)
+    table = corpus.build_token_table()
+
+    # --- small sharded chunk: parity vs single-device AND vs host -----
+    ch = next(corpus.stream_corpus_words(5000, seed=7, chunk_words=5000,
+                                         words_per_doc=250, table=table))
+    got = ops.build_root_index(ch.words, arrays, vocab, ch.doc_ids,
+                               ch.positions, mesh=mesh, block_b=256,
+                               block_w=256)
+    one = ops.build_root_index(ch.words, arrays, vocab, ch.doc_ids,
+                               ch.positions, block_b=256, block_w=256)
+    n = int(got[3])
+    assert n == int(one[3])
+    for g, o in zip(got[:3], one[:3]):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(o))
+    ids = ix.host_root_ids(ch.words, arrays, vocab)
+    wc, wd, wp = ix.host_index(ids, ch.doc_ids.astype(np.int32),
+                               ch.positions, len(vocab))
+    np.testing.assert_array_equal(np.asarray(got[0]), wc)
+    np.testing.assert_array_equal(np.asarray(got[1])[:n], wd)
+    np.testing.assert_array_equal(np.asarray(got[2])[:n], wp)
+    print("SHARDED_CHUNK_PARITY_OK")
+
+    # --- dispatch accounting: n_dev x (stemmer + postings) ------------
+    ops.reset_dispatch_count()
+    ops.build_root_index(ch.words, arrays, vocab, ch.doc_ids,
+                         ch.positions, mesh=mesh, block_b=256,
+                         block_w=256)
+    per_dev = -(-ch.words.shape[0] // 4)
+    want = 4 * (sf.planned_launches(per_dev, arrays, block_b=256) + 1)
+    assert ops.dispatch_count() == want, (ops.dispatch_count(), want)
+    print("SHARDED_DISPATCH_COUNT_OK")
+
+    # --- the acceptance scale: 1M words over the mesh vs host ---------
+    n_words = 1 << 20
+
+    def stream():
+        return corpus.stream_corpus_words(n_words, seed=0,
+                                          chunk_words=1 << 17,
+                                          words_per_doc=512, table=table)
+
+    idx = ix.build_corpus_index(stream(), arrays, mesh=mesh,
+                                block_b=2048, block_w=2048)
+    parts = []
+    for ch in stream():
+        ids = ix.host_root_ids(ch.words, arrays, vocab)
+        parts.append(ix.IndexPartial(
+            *ix.host_index(ids, ch.doc_ids.astype(np.int32),
+                           ch.positions, len(vocab))))
+    want = ix.merge_partials(parts, vocab)
+    np.testing.assert_array_equal(idx.counts, want.counts)
+    np.testing.assert_array_equal(idx.docs, want.docs)
+    np.testing.assert_array_equal(idx.positions, want.positions)
+    assert idx.n_postings > n_words // 2
+    print("SHARDED_MILLION_WORD_OK", idx.n_postings)
+""")
+
+
+def test_sharded_index_four_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    for marker in ("SHARDED_CHUNK_PARITY_OK", "SHARDED_DISPATCH_COUNT_OK",
+                   "SHARDED_MILLION_WORD_OK"):
+        assert marker in proc.stdout, proc.stderr[-3000:]
