@@ -27,6 +27,10 @@ Prints ``name,us_per_call,derived`` CSV lines:
                           index_build_s per corpus size through the
                           megakernel -> postings-reduction chain, host
                           numpy reference timings, device/host parity)
+  recovery_*     robustness (fault-recovery cost on the serve path:
+                          injected dispatch/retire faults vs fault-free
+                          baseline, bit-identity flags, shed rate under
+                          a queue cap)
   roofline_*     §Roofline (from dry-run records, if present)
 
 Sections that return row dicts (throughput / scaling / compare_stage)
@@ -86,6 +90,10 @@ SMOKE_PARAMS = {
     # at each, plus the device-vs-host parity row
     "corpus_index": dict(sizes=(8192, 32768), chunk_words=8192,
                          block_b=1024, block_w=1024),
+    # CI asserts every faulted row recovered bit-identically and that the
+    # shed row's admission control engaged (served + shed == submitted)
+    "recovery": dict(queue_depths=(8,), words_per_request=16, block_b=16,
+                     iters=1),
 }
 
 # The authoritative section-name list, importable without jax (the heavy
@@ -103,6 +111,7 @@ SECTION_NAMES = (
     "text_ingest",
     "compare_stage",
     "corpus_index",
+    "recovery",
     "roofline",
 )
 
@@ -134,9 +143,9 @@ def main(argv=None) -> None:
                      f" (choose from {sorted(SECTION_NAMES)})")
 
     from benchmarks import (accuracy_bench, compare_stage, corpus_index,
-                            dict_scaling, launch_overhead, roofline,
-                            scaling, serve_throughput, text_ingest,
-                            throughput)
+                            dict_scaling, launch_overhead, recovery,
+                            roofline, scaling, serve_throughput,
+                            text_ingest, throughput)
 
     fns = {
         "throughput": throughput.main,
@@ -149,6 +158,7 @@ def main(argv=None) -> None:
         "text_ingest": text_ingest.main,
         "compare_stage": compare_stage.main,
         "corpus_index": corpus_index.main,
+        "recovery": recovery.main,
         "roofline": roofline.main,
     }
     assert set(fns) == set(SECTION_NAMES), "SECTION_NAMES out of sync"

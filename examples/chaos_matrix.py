@@ -1,0 +1,155 @@
+"""Chaos smoke: every fault-injection site fired once, recovery verified.
+
+Runs the seeded fault matrix end to end — one scenario per injector
+site — and asserts the recovery invariant for each: a run that absorbs
+the fault produces results bit-identical to the fault-free run (or, for
+terminal faults, the correct structured FailureInfo), with no state
+leaked into the serving engine, the dictionary store, or the index
+checkpoint directory.
+
+  dispatch    injected launch failure mid-ring -> retried, bit-identical
+  retire      corrupted device readback -> checksum catch, redispatch,
+              bit-identical
+  publish     injected rejection between validation and the version
+              bump -> store untouched, next publish lands, rollback
+              restores the old lexicon as a new version
+  checkpoint  torn index-partial write -> readback verify + rewrite,
+              index bit-identical; plus a poison-pill request isolated
+              by bisection quarantine while its tile-mates complete
+
+The script exits non-zero on any mismatch, so CI runs it as the chaos
+step of the fault matrix.
+
+  PYTHONPATH=src python examples/chaos_matrix.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import corpus, stemmer
+from repro.index import builder
+from repro.serve import (DictStore, Engine, FaultInjector, FaultPlan,
+                         FaultSpec, InjectedFault, StemmerWorkload)
+
+N_REQ = 8
+WORDS_PER_REQ = 32
+SEED = 20260809
+
+
+def build_inputs():
+    d = corpus.build_dictionary(n_tri=400, n_quad=60, seed=0)
+    arrays = stemmer.RootDictArrays.from_rootdict(d)
+    words, _, _ = corpus.build_corpus(n_words=N_REQ * WORDS_PER_REQ, seed=1)
+    return arrays, corpus.encode_corpus(words)
+
+
+def drain(arrays, enc, *, injector=None, **kw):
+    eng = Engine(StemmerWorkload(DictStore(arrays), block_b=32,
+                                 max_inflight=2, injector=injector, **kw))
+    rids = [eng.submit(enc[i * WORDS_PER_REQ:(i + 1) * WORDS_PER_REQ])
+            for i in range(N_REQ)]
+    assert eng.run_until_drained().drained
+    return eng, rids
+
+
+def check_identical(eng, rids, baseline, skip=()):
+    for i, rid in enumerate(rids):
+        req = eng.result(rid)
+        if i in skip:
+            continue
+        assert req.failure is None, f"req {rid}: {req.failure}"
+        np.testing.assert_array_equal(req.roots, baseline[i])
+        np.testing.assert_array_equal(req.sources, baseline[i + N_REQ])
+
+
+def main():
+    arrays, enc = build_inputs()
+    eng0, rids0 = drain(arrays, enc)
+    baseline = ([np.array(eng0.result(r).roots) for r in rids0]
+                + [np.array(eng0.result(r).sources) for r in rids0])
+
+    # --- site dispatch: launch failure retried ------------------------
+    inj = FaultInjector(FaultPlan(specs=(FaultSpec("dispatch", at=1),),
+                                  seed=SEED))
+    eng, rids = drain(arrays, enc, injector=inj)
+    assert inj.fired == [("dispatch", "fail", 1)], inj.fired
+    assert eng.workload.retries_total == 1
+    check_identical(eng, rids, baseline)
+    print("CHAOS_DISPATCH_OK")
+
+    # --- site retire: corrupted readback caught by checksum -----------
+    inj = FaultInjector(FaultPlan(specs=(FaultSpec("retire", at=0),),
+                                  seed=SEED))
+    eng, rids = drain(arrays, enc, injector=inj)
+    assert eng.workload.checksum_failures == 1
+    check_identical(eng, rids, baseline)
+    print("CHAOS_RETIRE_OK")
+
+    # --- site publish: two-phase publish rejected, then rollback ------
+    inj = FaultInjector(FaultPlan(specs=(FaultSpec("publish", at=0),),
+                                  seed=SEED))
+    store = DictStore(arrays, keep_history=True, injector=inj)
+    v0 = store.version
+    grown = corpus.grow_root_arrays(arrays, 2048, seed=7)
+    try:
+        store.publish(grown)
+        raise AssertionError("injected publish rejection did not fire")
+    except InjectedFault:
+        pass
+    assert store.version == v0          # phase 2 never ran
+    v1 = store.publish(grown)           # next publish lands cleanly
+    v2 = store.rollback(v0)             # restore as a NEW version
+    assert v2 > v1 > v0
+    np.testing.assert_array_equal(
+        np.asarray(store.acquire().handle.arrays.tri),
+        np.asarray(store.get(v0).handle.arrays.tri))
+    print("CHAOS_PUBLISH_OK")
+
+    # --- site checkpoint: torn partial rewritten, index identical -----
+    import tempfile
+
+    table = corpus.build_token_table(forms_per_root=6)
+
+    def stream():
+        return corpus.stream_corpus_words(9000, seed=3, chunk_words=4096,
+                                          table=table)
+
+    ref = builder.build_corpus_index(stream(), arrays, block_b=512,
+                                     block_w=512)
+    inj = FaultInjector(FaultPlan(specs=(FaultSpec("checkpoint", at=1),),
+                                  seed=SEED))
+    with tempfile.TemporaryDirectory() as td:
+        idx = builder.build_corpus_index(stream(), arrays,
+                                         checkpoint_dir=td, block_b=512,
+                                         block_w=512, injector=inj)
+    assert inj.fired == [("checkpoint", "tear", 1)], inj.fired
+    np.testing.assert_array_equal(np.asarray(idx.counts),
+                                  np.asarray(ref.counts))
+    np.testing.assert_array_equal(np.asarray(idx.docs),
+                                  np.asarray(ref.docs))
+    np.testing.assert_array_equal(np.asarray(idx.positions),
+                                  np.asarray(ref.positions))
+    print("CHAOS_CHECKPOINT_OK")
+
+    # --- poison pill: bisection quarantine, tile-mates complete -------
+    inj = FaultInjector(FaultPlan(poison_rids=frozenset({2}), seed=SEED))
+    eng = Engine(StemmerWorkload(DictStore(arrays), block_b=128,
+                                 max_inflight=1, max_retries=1,
+                                 injector=inj))
+    rids = [eng.submit(enc[i * WORDS_PER_REQ:(i + 1) * WORDS_PER_REQ])
+            for i in range(4)]
+    assert eng.run_until_drained().drained
+    assert eng.workload.quarantined == 1
+    bad = eng.result(rids[2])
+    assert bad.failure is not None and bad.failure.code == "quarantined"
+    for i in (0, 1, 3):
+        req = eng.result(rids[i])
+        assert req.failure is None
+        np.testing.assert_array_equal(req.roots, baseline[i])
+    print("CHAOS_QUARANTINE_OK")
+
+
+if __name__ == "__main__":
+    t0 = time.time()
+    main()
+    print(f"CHAOS_MATRIX_OK ({time.time() - t0:.1f}s)")

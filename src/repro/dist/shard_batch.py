@@ -44,10 +44,11 @@ def mesh_axis_size(mesh, axis: str) -> int:
     jax.jit,
     static_argnames=("mesh", "axis", "infix", "match", "block_b",
                      "residency", "dict_block_r", "num_buffers",
-                     "skip_index", "visit_budget", "interpret"))
+                     "skip_index", "visit_budget", "with_checksum",
+                     "interpret"))
 def _shard_call(words, roots, *, mesh, axis, infix, match, block_b,
                 residency, dict_block_r, num_buffers, skip_index,
-                visit_budget, interpret):
+                visit_budget, with_checksum, interpret):
     n_dev = mesh_axis_size(mesh, axis)
     b = words.shape[0]
     pad = (-b) % (n_dev * block_b)
@@ -63,7 +64,15 @@ def _shard_call(words, roots, *, mesh, axis, infix, match, block_b,
     f = shard_map(local, mesh=mesh, in_specs=(P(axis), P()),
                   out_specs=(P(axis), P(axis)), check_rep=False)
     root, source = f(wp, roots)
-    return root[:b], source[:b]
+    root, source = root[:b], source[:b]
+    if with_checksum:
+        # retire-side integrity row, traced into the SAME program as the
+        # sharded launch (b must be a multiple of block_b — the serving
+        # ring's bucketed tiles always are)
+        from repro.kernels.ops import _checksum_rows  # lazy: no cycle
+
+        return root, source, _checksum_rows(root, source, block_b)
+    return root, source
 
 
 def shard_batch(words, roots, mesh, *, axis: str = "data",
@@ -71,7 +80,7 @@ def shard_batch(words, roots, mesh, *, axis: str = "data",
                 block_b: int = 256, residency: str = "auto",
                 dict_block_r: int = 8, num_buffers: int = 2,
                 skip_index: bool = True, visit_budget: int | None = None,
-                interpret: bool = False):
+                with_checksum: bool = False, interpret: bool = False):
     """words int32[B,16] -> (root int32[B,4], source int32[B]), B split
     over ``mesh[axis]``.
 
@@ -94,4 +103,4 @@ def shard_batch(words, roots, mesh, *, axis: str = "data",
                        match=match, block_b=block_b, residency=residency,
                        dict_block_r=dict_block_r, num_buffers=num_buffers,
                        skip_index=skip_index, visit_budget=visit_budget,
-                       interpret=interpret)
+                       with_checksum=with_checksum, interpret=interpret)

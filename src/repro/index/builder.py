@@ -10,11 +10,18 @@ the per-chunk partials merge with vectorised searchsorted/scatter numpy
 
 Checkpointing: with ``checkpoint_dir`` every completed chunk lands as an
 ``.npz`` partial plus an atomically-rewritten ``manifest.json`` that
-records the vocab fingerprint and, per chunk, the word range and the
-``DictStore`` version pinned while stemming it. ``resume=True`` replays
-the manifest — completed chunks load from disk (their stream items are
-consumed and cross-checked, not recomputed) and the build continues from
-the first missing chunk, producing a bit-identical index.
+records the vocab fingerprint and, per chunk, the word range, the
+``DictStore`` version pinned while stemming it, and the sha256 content
+hash of the partial file. Partials are written tmp-then-rename and
+verified by readback + hash before the rename, so a torn write (crash,
+injected fault) never leaves a renamed-but-corrupt chunk; ``resume=True``
+replays the manifest — completed chunks load from disk (their stream
+items are consumed and cross-checked, not recomputed) *after* their
+content hash is re-verified, and a missing / torn / hash-divergent
+partial is transparently recomputed from its stream item instead of
+poisoning the merge. Chunk compute and checkpoint writes both retry
+(``chunk_retries``), so a build under an injected fault plan completes
+bit-identical to a fault-free run (the chaos matrix in CI asserts it).
 """
 from __future__ import annotations
 
@@ -28,7 +35,8 @@ import numpy as np
 from repro.core import alphabet as ab
 from repro.core import stemmer as core_stemmer
 
-MANIFEST_SCHEMA = 1
+# schema 2: per-chunk "sha" content hashes (PR 9 checkpoint integrity)
+MANIFEST_SCHEMA = 2
 
 
 def build_vocab(arrays) -> np.ndarray:
@@ -131,6 +139,14 @@ def _chunk_path(ckpt_dir: str, i: int) -> str:
     return os.path.join(ckpt_dir, f"chunk_{i:06d}.npz")
 
 
+def _file_sha(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()[:16]
+
+
 def _write_manifest(ckpt_dir: str, manifest: dict) -> None:
     tmp = os.path.join(ckpt_dir, "manifest.json.tmp")
     with open(tmp, "w") as f:
@@ -146,10 +162,55 @@ def _load_manifest(ckpt_dir: str) -> dict | None:
         return json.load(f)
 
 
-def _load_partial(ckpt_dir: str, i: int) -> IndexPartial:
-    with np.load(_chunk_path(ckpt_dir, i)) as z:
+def _read_partial(path: str) -> IndexPartial:
+    with np.load(path) as z:
         return IndexPartial(counts=z["counts"].astype(np.int64),
                             docs=z["docs"], positions=z["positions"])
+
+
+def _load_partial(ckpt_dir: str, i: int,
+                  want_sha: str | None = None) -> IndexPartial | None:
+    """Load chunk i if its file exists, parses, and (when the manifest
+    carries one) matches the recorded content hash; None otherwise — a
+    torn or corrupt partial is a recompute, never an error."""
+    path = _chunk_path(ckpt_dir, i)
+    if not os.path.exists(path):
+        return None
+    if want_sha is not None and _file_sha(path) != want_sha:
+        return None
+    try:
+        return _read_partial(path)
+    except Exception:
+        return None
+
+
+def _write_partial(ckpt_dir: str, i: int, part: IndexPartial,
+                   injector=None, retries: int = 2) -> str:
+    """Write chunk i tmp-then-rename with readback verification; returns
+    the renamed file's content hash. An injected (or real) torn write is
+    caught by the readback and retried up to ``retries`` times."""
+    path = _chunk_path(ckpt_dir, i)
+    tmp = path + ".tmp"
+    last = None
+    for _ in range(retries + 1):
+        with open(tmp, "wb") as f:
+            np.savez(f, counts=part.counts, docs=part.docs,
+                     positions=part.positions)
+        if injector is not None:
+            injector.on_checkpoint(tmp)     # may tear the file
+        try:
+            got = _read_partial(tmp)
+            if (got.n_postings != part.n_postings
+                    or not np.array_equal(got.counts, part.counts)):
+                raise IOError("readback diverges from the in-memory partial")
+        except Exception as e:
+            last = e
+            continue
+        sha = _file_sha(tmp)
+        os.replace(tmp, path)
+        return sha
+    raise IOError(f"chunk {i}: checkpoint write still corrupt after"
+                  f" {retries + 1} attempts: {last}")
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +219,7 @@ def _load_partial(ckpt_dir: str, i: int) -> IndexPartial:
 def build_corpus_index(stream, roots, *, mesh=None, checkpoint_dir=None,
                        resume: bool = False, block_b: int = 2048,
                        block_w: int = 2048, interpret: bool | None = None,
+                       injector=None, chunk_retries: int = 2,
                        **stem_kw) -> RootIndex:
     """Stream of ``core.corpus.CorpusChunk`` -> merged :class:`RootIndex`.
 
@@ -168,7 +230,11 @@ def build_corpus_index(stream, roots, *, mesh=None, checkpoint_dir=None,
     frozen at build start, so mid-build publishes change *stemming* but
     never the id space). ``mesh`` shards every chunk over its ``data``
     axis. ``checkpoint_dir`` + ``resume`` give chunk-granular restart
-    with bit-identical results.
+    with bit-identical results; resumed partials are hash-verified and
+    transparently recomputed if missing or torn. ``injector`` threads a
+    ``serve.faults.FaultInjector`` through the chunk compute (site
+    ``dispatch``) and the checkpoint writes (site ``checkpoint``);
+    ``chunk_retries`` bounds per-chunk retry on either kind of failure.
     """
     from repro.kernels import ops  # lazy: keep index importable sans jax
 
@@ -208,15 +274,35 @@ def build_corpus_index(stream, roots, *, mesh=None, checkpoint_dir=None,
                     f" covers words [{rec['start_word']},"
                     f" +{rec['n_words']}), stream yields"
                     f" [{ch.start_word}, +{ch.n_words})")
-            done.append(_load_partial(checkpoint_dir, i))
-            versions.append(rec["dict_version"])
-            continue
-        dv = store.acquire() if store else None
-        handle = dv.handle if dv else roots
-        counts, docs, poss, n_post = ops.build_root_index(
-            ch.words, handle, vocab, ch.doc_ids, ch.positions, mesh=mesh,
-            block_b=block_b, block_w=block_w, interpret=interpret,
-            **stem_kw)
+            part = _load_partial(checkpoint_dir, i, rec.get("sha"))
+            if part is not None:
+                done.append(part)
+                versions.append(rec["dict_version"])
+                continue
+            # missing / torn / hash-divergent partial: fall through and
+            # recompute this chunk from its stream item (chunk-level
+            # retry keeps the rest of the checkpoint usable)
+        last = None
+        for _ in range(chunk_retries + 1):
+            dv = store.acquire() if store else None
+            handle = dv.handle if dv else roots
+            try:
+                if injector is not None:
+                    injector.on_dispatch()
+                counts, docs, poss, n_post = ops.build_root_index(
+                    ch.words, handle, vocab, ch.doc_ids, ch.positions,
+                    mesh=mesh, block_b=block_b, block_w=block_w,
+                    interpret=interpret, **stem_kw)
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:
+                last = e
+                continue
+            break
+        else:
+            raise RuntimeError(
+                f"chunk {i}: compute still failing after"
+                f" {chunk_retries + 1} attempts") from last
         n_post = int(n_post)
         part = IndexPartial(counts=np.asarray(counts).astype(np.int64),
                             docs=np.asarray(docs[:n_post]),
@@ -224,12 +310,15 @@ def build_corpus_index(stream, roots, *, mesh=None, checkpoint_dir=None,
         done.append(part)
         versions.append(dv.version if dv else 0)
         if checkpoint_dir:
-            np.savez(_chunk_path(checkpoint_dir, i),
-                     counts=part.counts, docs=part.docs,
-                     positions=part.positions)
-            manifest["chunks"].append({
-                "i": i, "start_word": int(ch.start_word),
-                "n_words": int(ch.n_words), "n_postings": part.n_postings,
-                "dict_version": versions[-1]})
+            sha = _write_partial(checkpoint_dir, i, part,
+                                 injector=injector, retries=chunk_retries)
+            rec = {"i": i, "start_word": int(ch.start_word),
+                   "n_words": int(ch.n_words),
+                   "n_postings": part.n_postings,
+                   "dict_version": versions[-1], "sha": sha}
+            if i < len(manifest["chunks"]):
+                manifest["chunks"][i] = rec     # recomputed torn chunk
+            else:
+                manifest["chunks"].append(rec)
             _write_manifest(checkpoint_dir, manifest)
     return merge_partials(done, vocab, dict_versions=versions)

@@ -11,6 +11,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import pyref
 from repro.core import stemmer as core_stemmer
@@ -153,6 +154,7 @@ def extract_roots_fused(words, roots, *, infix: bool = True,
                         residency: str = "auto", dict_block_r: int = 8,
                         num_buffers: int = 2, skip_index: bool = True,
                         visit_budget: int | None = None,
+                        with_checksum: bool = False,
                         interpret: bool | None = None):
     """Megabatch megakernel: all five stages, the grid's batch axis
     spanning every [block_b, 16] tile of the (arbitrarily deep) batch, in
@@ -176,6 +178,11 @@ def extract_roots_fused(words, roots, *, infix: bool = True,
     pinned residency overrides the residency argument and its prebuilt
     tile stream skips the per-call pad/concat, so dictionary hot swaps
     with matching shapes never re-trace.
+
+    ``with_checksum=True`` returns ``(root, source, checksums)`` with the
+    per-tile integrity row of :func:`tile_checksum` computed in the SAME
+    jit scope as the launch (rows must be a multiple of block_b) — the
+    serving path's retire-side verification pays no extra XLA dispatch.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -183,6 +190,13 @@ def extract_roots_fused(words, roots, *, infix: bool = True,
         words.shape[0], roots, infix=infix, block_b=block_b,
         residency=residency, dict_block_r=dict_block_r,
         visit_budget=visit_budget))
+    if with_checksum:
+        return _stem_cs_call(words, roots, 0, infix=infix, match=match,
+                             block_b=block_b, residency=residency,
+                             dict_block_r=dict_block_r,
+                             num_buffers=num_buffers,
+                             skip_index=skip_index, persistent=False,
+                             visit_budget=visit_budget, interpret=interpret)
     return sf.stem_fused_pallas(words, roots, infix=infix, match=match,
                                 block_b=block_b, residency=residency,
                                 dict_block_r=dict_block_r,
@@ -197,6 +211,7 @@ def extract_roots_persistent(words, roots, *, infix: bool = True,
                              residency: str = "auto", dict_block_r: int = 8,
                              num_buffers: int = 2, skip_index: bool = True,
                              version_slot=0, visit_budget: int | None = None,
+                             with_checksum: bool = False,
                              interpret: bool | None = None):
     """Persistent serving kernel: ONE launch whose body fori_loops over a
     scalar-prefetched work-descriptor ring of batch tiles, DMA-ing word
@@ -204,7 +219,9 @@ def extract_roots_persistent(words, roots, *, infix: bool = True,
     ``persistent=True``). Returns ``(root, source, flags)`` — flags
     int32[batch_tiles] is ``1 + version_slot`` per retired descriptor,
     the completion word the serving ring polls. Roots/sources are
-    bit-identical to :func:`extract_roots_fused`.
+    bit-identical to :func:`extract_roots_fused`. ``with_checksum=True``
+    appends the :func:`tile_checksum` row, fused into the launch's jit
+    scope.
     """
     if interpret is None:
         interpret = _interpret_default()
@@ -212,6 +229,14 @@ def extract_roots_persistent(words, roots, *, infix: bool = True,
         words.shape[0], roots, infix=infix, block_b=block_b,
         residency=residency, dict_block_r=dict_block_r, persistent=True,
         visit_budget=visit_budget))
+    if with_checksum:
+        return _stem_cs_call(words, roots, version_slot, infix=infix,
+                             match=match, block_b=block_b,
+                             residency=residency,
+                             dict_block_r=dict_block_r,
+                             num_buffers=num_buffers,
+                             skip_index=skip_index, persistent=True,
+                             visit_budget=visit_budget, interpret=interpret)
     return sf.stem_fused_pallas(words, roots, infix=infix, match=match,
                                 block_b=block_b, residency=residency,
                                 dict_block_r=dict_block_r,
@@ -228,13 +253,16 @@ def extract_roots_sharded(words, roots, mesh, *, axis: str = "data",
                           dict_block_r: int = 8, num_buffers: int = 2,
                           skip_index: bool = True,
                           visit_budget: int | None = None,
+                          with_checksum: bool = False,
                           interpret: bool | None = None):
     """Megakernel launch data-sharded over ``mesh[axis]``: the batch —
     including a multi-tile megabatch — is split into per-device shards
     whose grid spans every local [block_b, 16] tile, the packed
     dictionaries replicated. Same contract as :func:`extract_roots_fused`
-    — bit-identical, ragged batches padded and sliced back. This is the
-    serving path behind ``StemmerWorkload(data_devices=N)``.
+    — bit-identical, ragged batches padded and sliced back (including the
+    ``with_checksum=True`` integrity row, fused into the sharded jit
+    scope). This is the serving path behind
+    ``StemmerWorkload(data_devices=N)``.
     """
     from repro.dist import mesh_axis_size, shard_batch  # lazy
 
@@ -249,7 +277,88 @@ def extract_roots_sharded(words, roots, mesh, *, axis: str = "data",
                        match=match, block_b=block_b, residency=residency,
                        dict_block_r=dict_block_r, num_buffers=num_buffers,
                        skip_index=skip_index, visit_budget=visit_budget,
-                       interpret=interpret)
+                       with_checksum=with_checksum, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Retire-side integrity: a device-computed checksum row per block_b tile
+# ---------------------------------------------------------------------------
+# odd int32 weights; position term makes the fold order-sensitive inside
+# a tile, so swapped rows are detected, not just flipped values
+_CS_WEIGHTS = (1000003, 999983, 65599, 31337, 271829, 69069)
+_CS_ROOT_W = np.array(_CS_WEIGHTS[:4], np.int32)   # host-fold constants
+_CS_SRC_W = np.int32(_CS_WEIGHTS[4])
+
+
+def _checksum_rows(roots, sources, block_b: int):
+    """Traceable checksum body, shared by :func:`tile_checksum` and the
+    ``with_checksum`` launch fusions (here and dist.shard_batch)."""
+    w = _CS_WEIGHTS
+    r = roots.astype(jnp.int32)
+    s = sources.astype(jnp.int32).reshape(-1)
+    idx = jnp.arange(r.shape[0], dtype=jnp.int32) % block_b
+    row = (r[:, 0] * w[0] + r[:, 1] * w[1] + r[:, 2] * w[2]
+           + r[:, 3] * w[3] + s * w[4] + idx * w[5] + 1)
+    return row.reshape(-1, block_b).sum(axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def tile_checksum(roots, sources, *, block_b: int):
+    """Per-tile int32 checksum over a launch's (roots, sources) outputs.
+
+    roots int32[rows, 4], sources int32[rows], rows a multiple of
+    block_b -> int32[rows // block_b]. The serving path computes it in
+    the SAME jit scope as the launch (``with_checksum=True`` on the
+    extract_roots_* wrappers, so integrity costs no extra XLA dispatch);
+    :func:`tile_checksum_host` re-derives it from the host copies at
+    retire, so a torn readback or corrupted transfer fails loudly into
+    the retry path instead of serving garbage. Int32 wraparound
+    arithmetic, bit-exact between XLA and numpy.
+    """
+    return _checksum_rows(roots, sources, block_b)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("infix", "match", "block_b", "residency",
+                     "dict_block_r", "num_buffers", "skip_index",
+                     "persistent", "visit_budget", "interpret"))
+def _stem_cs_call(words, roots, version_slot, *, infix, match, block_b,
+                  residency, dict_block_r, num_buffers, skip_index,
+                  persistent, visit_budget, interpret):
+    """stem_fused_pallas + per-tile checksum traced into ONE XLA program
+    (the separate tile_checksum dispatch cost ~20% of a small serve
+    drain). version_slot is traced so hot swaps replay the cache."""
+    out = sf.stem_fused_pallas(words, roots, infix=infix, match=match,
+                               block_b=block_b, residency=residency,
+                               dict_block_r=dict_block_r,
+                               num_buffers=num_buffers,
+                               skip_index=skip_index, persistent=persistent,
+                               version_slot=version_slot,
+                               visit_budget=visit_budget,
+                               interpret=interpret)
+    return out + (_checksum_rows(out[0], out[1], block_b),)
+
+
+@functools.lru_cache(maxsize=64)
+def _cs_host_pos_term(rows: int, block_b: int) -> np.ndarray:
+    """Precomputed ``idx * w5 + 1`` term of the host checksum — the
+    retire path recomputes the checksum per tile, so the constant
+    position fold is cached per (rows, block_b)."""
+    idx = (np.arange(rows, dtype=np.int32) % block_b).astype(np.int32)
+    return idx * np.int32(_CS_WEIGHTS[5]) + np.int32(1)
+
+
+def tile_checksum_host(roots, sources, *, block_b: int) -> np.ndarray:
+    """Numpy mirror of :func:`tile_checksum` (same int32 wraparound
+    math; the matmul and sum force dtype=int32 because numpy would
+    otherwise accumulate in int64). Runs on every serve retire, so the
+    fold is a single int32 matvec plus cached constants."""
+    r = np.asarray(roots).astype(np.int32, copy=False)
+    s = np.asarray(sources).astype(np.int32, copy=False).reshape(-1)
+    row = r @ _CS_ROOT_W + s * _CS_SRC_W
+    row += _cs_host_pos_term(r.shape[0], block_b)
+    return row.reshape(-1, block_b).sum(axis=1, dtype=np.int32)
 
 
 # ---------------------------------------------------------------------------

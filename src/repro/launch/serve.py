@@ -19,6 +19,30 @@ from repro.serve import (DictStore, Engine, LMDecodeWorkload,
                          StemmerWorkload, TextAnalysisWorkload)
 
 
+def _engine_kw(args) -> dict:
+    """Engine admission-control kwargs shared by all three workloads."""
+    return dict(queue_cap=args.queue_cap or None, on_full=args.on_full)
+
+
+def _deadline_s(args) -> float | None:
+    return args.deadline_ms / 1000.0 if args.deadline_ms else None
+
+
+def _retry_kw(args) -> dict:
+    """StemmerWorkload/TextAnalysisWorkload retry kwargs (lm has none)."""
+    return {} if args.max_retries is None else dict(
+        max_retries=args.max_retries)
+
+
+def _report_failures(eng, rids) -> str:
+    failed = [eng.result(r) for r in rids]
+    failed = [r for r in failed if r is not None and r.failure is not None]
+    for req in failed[:4]:
+        print(f"  req {req.rid} FAILED: {req.failure.code}"
+              f" ({req.failure.detail})")
+    return f", {len(failed)} failed, {eng.shed} shed" if failed else ""
+
+
 def required_cache_len(prompt_len: int, max_new: int) -> int:
     """KV positions a request writes: prompt_len prefill steps plus
     max_new - 1 decode steps (the last emitted token is never fed back)."""
@@ -37,13 +61,13 @@ def serve_lm(args) -> None:
     cfg = configs.smoke_config(configs.get_config(args.arch))
     params = pm.init_params(model_mod.model_spec(cfg), jax.random.key(0))
     eng = Engine(LMDecodeWorkload(cfg, params, max_batch=args.max_batch,
-                                  cache_len=cache_len))
+                                  cache_len=cache_len), **_engine_kw(args))
 
     rng = np.random.default_rng(0)
     t0 = time.time()
     rids = [
         eng.submit(rng.integers(0, cfg.vocab, args.prompt_len),
-                   max_new=args.max_new)
+                   max_new=args.max_new, deadline_s=_deadline_s(args))
         for _ in range(args.requests)
     ]
     rep = eng.run_until_drained()
@@ -51,7 +75,7 @@ def serve_lm(args) -> None:
     total_tokens = sum(len(eng.result(r).tokens_out) for r in rids)
     print(f"served {args.requests} requests / {total_tokens} tokens in "
           f"{dt:.2f}s ({total_tokens / dt:.1f} tok/s, {rep.ticks} ticks, "
-          f"cache_len {cache_len})")
+          f"cache_len {cache_len}{_report_failures(eng, rids)})")
     for rid in rids[:4]:
         print(f"  req {rid}: {eng.result(rid).tokens_out}")
 
@@ -71,14 +95,16 @@ def serve_stemmer(args) -> None:
                                  max_inflight=args.inflight,
                                  data_devices=args.devices,
                                  megabatch_tiles=args.megabatch,
-                                 persistent=args.persistent))
+                                 persistent=args.persistent,
+                                 **_retry_kw(args)), **_engine_kw(args))
 
     wpr = args.words_per_request
     words, _, _ = corpus.build_corpus(n_words=args.requests * wpr, seed=1)
     enc = corpus.encode_corpus(words)
 
     t0 = time.time()
-    rids = [eng.submit(enc[i * wpr:(i + 1) * wpr])
+    rids = [eng.submit(enc[i * wpr:(i + 1) * wpr],
+                       deadline_s=_deadline_s(args))
             for i in range(args.requests)]
     rep = eng.run_until_drained()
     dt = time.time() - t0
@@ -89,10 +115,12 @@ def serve_stemmer(args) -> None:
           f"super-tile {args.devices}x{args.block_b}, "
           f"megabatch {args.megabatch}"
           f"{', persistent' if args.persistent else ''}, "
-          f"inflight {args.inflight})")
+          f"inflight {args.inflight}{_report_failures(eng, rids)})")
     for rid in rids[:2]:
         req = eng.result(rid)
-        print(f"  req {rid}: {req.n_words} roots, dict v{req.dict_version}")
+        if req.failure is None:
+            print(f"  req {rid}: {req.n_words} roots,"
+                  f" dict v{req.dict_version}")
 
 
 def build_documents(n_docs: int, words_per_doc: int, seed: int = 1):
@@ -130,12 +158,13 @@ def serve_text(args) -> None:
                                       max_inflight=args.inflight,
                                       data_devices=args.devices,
                                       megabatch_tiles=args.megabatch,
-                                      persistent=args.persistent))
+                                      persistent=args.persistent,
+                                      **_retry_kw(args)), **_engine_kw(args))
 
     docs = build_documents(args.requests, args.words_per_request)
     n_bytes = sum(len(doc.encode("utf-8")) for doc in docs)
     t0 = time.time()
-    rids = [eng.submit(doc) for doc in docs]
+    rids = [eng.submit(doc, deadline_s=_deadline_s(args)) for doc in docs]
     rep = eng.run_until_drained()
     dt = time.time() - t0
     n_words = sum(eng.result(r).n_words for r in rids)
@@ -144,9 +173,11 @@ def serve_text(args) -> None:
           f" {n_words / dt:.1f} Wps, {rep.ticks} ticks,"
           f" {eng.workload.ticks_launched} launches,"
           f" frontend {args.frontend}, megabatch {args.megabatch},"
-          f" inflight {args.inflight})")
+          f" inflight {args.inflight}{_report_failures(eng, rids)})")
     for rid in rids[:2]:
         req = eng.result(rid)
+        if req.failure is not None:
+            continue
         root, src, span = req.analyses()[0][0]
         print(f"  req {rid}: {req.n_words} tokens, first root {root!r}"
               f" (src {src}, bytes {span})")
@@ -202,7 +233,36 @@ def main():
                     default="kernel",
                     help="text front end: Pallas kernel, pure-jnp"
                          " reference, or the python oracle")
+    # robustness knobs (DESIGN.md §11)
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline in milliseconds; expired"
+                         " requests finish with FailureInfo code"
+                         " 'deadline' (0 = no deadline)")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="launch retries before bisect/quarantine"
+                         " (stemmer/text only; 0 = strict fail-fast,"
+                         " default 2)")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="admission-control bound on queued requests"
+                         " (0 = unbounded)")
+    ap.add_argument("--on-full", choices=Engine.ON_FULL, default="raise",
+                    help="full-queue policy: raise QueueFull, shed the"
+                         " new request (FailureInfo 'shed'), or block"
+                         " until a slot frees")
     args = ap.parse_args()
+
+    if args.deadline_ms < 0:
+        ap.error("--deadline-ms must be >= 0")
+    if args.queue_cap < 0:
+        ap.error("--queue-cap must be >= 0")
+    if args.max_retries is not None and args.max_retries < 0:
+        ap.error("--max-retries must be >= 0")
+    if args.on_full != "raise" and not args.queue_cap:
+        ap.error(f"--on-full {args.on_full} needs --queue-cap > 0"
+                 " (an unbounded queue is never full)")
+    if args.workload == "lm" and args.max_retries is not None:
+        ap.error("--max-retries applies to the stemmer/text workloads"
+                 " (the LM decode loop has no launch retry path)")
 
     if args.workload == "stemmer":
         serve_stemmer(args)

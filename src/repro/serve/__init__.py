@@ -2,18 +2,25 @@
 
 Engine (scheduler) x Workload (LMDecodeWorkload | StemmerWorkload) +
 DictStore (versioned hot-swappable stemmer dictionaries). ServeEngine
-is the back-compat LM facade.
+is the back-compat LM facade. ``faults`` supplies the deterministic
+fault-injection harness (FaultPlan/FaultInjector) and the structured
+FailureInfo that terminally failed requests carry.
 """
-from repro.serve.dict_store import DictStore, DictVersion
+from repro.serve.dict_store import (DictStore, DictValidationError,
+                                    DictVersion, validate_handle)
 from repro.serve.engine import (DrainReport, Engine, EngineUndrained,
-                                InflightTile, LMDecodeWorkload, Request,
-                                ServeEngine, StemRequest, StemmerWorkload,
-                                Workload)
+                                InflightTile, LMDecodeWorkload, QueueFull,
+                                Request, ServeEngine, StemRequest,
+                                StemmerWorkload, Workload)
+from repro.serve.faults import (FailureInfo, FaultInjector, FaultPlan,
+                                FaultSpec, InjectedFault)
 from repro.serve.text import TextAnalysisWorkload, TextRequest
 
 __all__ = [
-    "DictStore", "DictVersion", "DrainReport", "Engine", "EngineUndrained",
-    "InflightTile", "LMDecodeWorkload", "Request", "ServeEngine",
+    "DictStore", "DictValidationError", "DictVersion", "DrainReport",
+    "Engine", "EngineUndrained", "FailureInfo", "FaultInjector",
+    "FaultPlan", "FaultSpec", "InflightTile", "InjectedFault",
+    "LMDecodeWorkload", "QueueFull", "Request", "ServeEngine",
     "StemRequest", "StemmerWorkload", "TextAnalysisWorkload", "TextRequest",
-    "Workload",
+    "Workload", "validate_handle",
 ]

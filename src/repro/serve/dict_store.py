@@ -29,6 +29,19 @@ the dictionary per call and hot swaps keep the cached trace.
 Responses record the version(s) that served them (StemRequest.dict_
 versions), and ``get(version)`` resolves any published version back to
 its arrays, so served roots stay auditable after further swaps.
+
+Publishes are *two-phase* (DESIGN.md "Failure model & recovery"):
+phase 1 packs + resolves the handle and validates the layout every
+kernel path assumes — 1-D int32 tables, strictly sorted unique packed
+24-bit keys (or the single ``[-1]`` empty-table sentinel), and, when a
+streamed ``DictTileSet`` is prebuilt, tile-consistent sentinel-padded
+boundary tables — raising :class:`DictValidationError` with the store
+untouched; phase 2 is the atomic version bump. A ``FaultInjector``
+passed at construction can reject between the phases (site
+``publish``), proving no partial state ever lands. ``rollback(v)``
+re-installs a kept historical version's handle as a NEW monotone
+version — the recovery path when a published lexicon turns out bad
+downstream of validation.
 """
 from __future__ import annotations
 
@@ -42,6 +55,74 @@ from repro.core import pyref
 from repro.core import stemmer as core_stemmer
 
 TABLES = ("tri", "quad", "bi")
+
+
+class DictValidationError(ValueError):
+    """A publish failed phase-1 layout validation; nothing was installed."""
+
+
+def _validate_table(name: str, arr) -> None:
+    a = np.asarray(arr)
+    if a.ndim != 1 or a.dtype != np.int32:
+        raise DictValidationError(
+            f"{name}: expected 1-D int32 table, got shape {a.shape}"
+            f" dtype {a.dtype}")
+    if a.size == 0:
+        raise DictValidationError(
+            f"{name}: empty table must be the [-1] sentinel, not size 0")
+    if a.size == 1 and a[0] == -1:
+        return                          # the empty-table sentinel
+    if int(a.min()) < 0:
+        raise DictValidationError(
+            f"{name}: negative key {int(a.min())} (the -1 sentinel is only"
+            " legal as a whole single-element table)")
+    if int(a.max()) >= (1 << 24):
+        raise DictValidationError(
+            f"{name}: key {int(a.max())} outside the packed 24-bit range")
+    d = np.diff(a)
+    if d.size and int(d.min()) <= 0:
+        at = int(np.argmin(d))
+        raise DictValidationError(
+            f"{name}: not strictly sorted/unique at index {at}"
+            f" ({int(a[at])} -> {int(a[at + 1])})")
+
+
+def validate_handle(handle: core_stemmer.ResolvedRootDict) -> None:
+    """Phase-1 publish validation: every invariant the megakernel paths
+    assume about a resolved dictionary handle.
+
+    Raw tables must be sorted/unique packed keys (binary search and
+    sorted-merge deltas both break silently otherwise). A prebuilt
+    streamed tile set must be shape-consistent with ``dict_block_r`` and
+    its boundary tables must equal the tile stream's first/last lanes —
+    the sentinel-padded pow2-per-tile layout the tile-visit pre-pass
+    range-rejects against.
+    """
+    from repro.kernels import stem_match as sm  # lazy, kernels need core
+
+    for name in TABLES:
+        _validate_table(name, getattr(handle.arrays, name))
+    tiles = handle.tiles
+    if tiles is None:
+        return
+    stream = np.asarray(tiles.stream)
+    n_tiles = sum(tiles.counts)
+    if stream.shape != (n_tiles * tiles.dict_block_r, sm.LANE):
+        raise DictValidationError(
+            f"tile stream shape {stream.shape} != "
+            f"({n_tiles} tiles x {tiles.dict_block_r} rows, {sm.LANE})")
+    flat = stream.reshape(n_tiles, -1)
+    if np.diff(flat, axis=1).min(initial=0) < 0:
+        raise DictValidationError(
+            "tile stream has an internally unsorted tile (sentinel"
+            " padding must keep every tile ascending)")
+    mins, maxs = np.asarray(tiles.mins), np.asarray(tiles.maxs)
+    if (mins.shape != (n_tiles,) or maxs.shape != (n_tiles,)
+            or not np.array_equal(mins, flat[:, 0])
+            or not np.array_equal(maxs, flat[:, -1])):
+        raise DictValidationError(
+            "tile boundary tables diverge from the tile stream's"
+            " first/last lanes")
 
 
 def _sorted_member(haystack: np.ndarray, needles: np.ndarray) -> np.ndarray:
@@ -91,7 +172,7 @@ class DictStore:
 
     def __init__(self, arrays, *, residency: str = "auto",
                  keep_history: bool = True, infix: bool = True,
-                 dict_block_r: int | None = None):
+                 dict_block_r: int | None = None, injector=None):
         self._lock = threading.Lock()       # guards the version table
         self._pub_lock = threading.Lock()   # serialises publishers
         self._residency = residency
@@ -101,7 +182,9 @@ class DictStore:
         self._versions: dict[int, DictVersion] = {}
         self._current: DictVersion | None = None
         self._next_version = 0
-        self.publish(arrays)
+        self._injector = None
+        self.publish(arrays)                # the seed is never injected:
+        self._injector = injector           # a store must construct usable
 
     def _install(self, handle: core_stemmer.ResolvedRootDict) -> int:
         with self._lock:
@@ -114,13 +197,24 @@ class DictStore:
             self._current = dv
         return version
 
-    def publish(self, arrays) -> int:
+    def _prepare(self, handle) -> core_stemmer.ResolvedRootDict:
+        """Phase 1 of a publish: validate + (optionally) inject. No store
+        state changes here — a raise leaves the current version serving."""
+        validate_handle(handle)
+        if self._injector is not None:
+            self._injector.on_publish()
+        return handle
+
+    def publish(self, arrays, *, validate: bool = True) -> int:
         """Upload a new lexicon; returns its version number.
 
         Accepts packed RootDictArrays (or an already-resolved handle) or
-        a raw pyref.RootDict, which is packed here. The new version
-        becomes current atomically; in-flight ticks keep the snapshot
-        they acquired.
+        a raw pyref.RootDict, which is packed here. Two-phase: the
+        resolved handle is validated first (DictValidationError leaves
+        the store untouched), then installed — the new version becomes
+        current atomically; in-flight ticks keep the snapshot they
+        acquired. ``validate=False`` skips phase 1 for trusted bulk
+        republishes.
         """
         with self._pub_lock:
             if isinstance(arrays, pyref.RootDict):
@@ -128,7 +222,23 @@ class DictStore:
             handle = core_stemmer.resolve_dict(
                 arrays, residency=self._residency, infix=self._infix,
                 dict_block_r=self._dict_block_r)
+            if validate:
+                self._prepare(handle)
             return self._install(handle)
+
+    def rollback(self, version: int) -> int:
+        """Re-install a previously published version's handle as a NEW
+        monotone version; returns the new version number.
+
+        The recovery path when a validated publish turns out bad
+        downstream (wrong roots in production): versions never move
+        backwards — in-flight tiles keep serving the version they
+        pinned — but the *next* dispatch acquires the restored lexicon.
+        Requires ``keep_history=True`` (raises KeyError otherwise).
+        """
+        with self._pub_lock:
+            dv = self.get(version)
+            return self._install(dv.handle)
 
     def publish_delta(self, insert=None, remove=None) -> int:
         """Publish the next version as a sorted-merge delta against the
@@ -195,6 +305,7 @@ class DictStore:
             handle = core_stemmer.resolve_dict(
                 arrays, residency=self._residency, infix=self._infix,
                 dict_block_r=self._dict_block_r)
+            self._prepare(handle)       # two-phase, same as publish()
             return self._install(handle)
 
     def acquire(self) -> DictVersion:

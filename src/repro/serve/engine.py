@@ -35,9 +35,23 @@ workload has capacity, the finished table, and drain accounting. What a
 Keeping the tile shape fixed means every launch replays the same jit
 trace; dictionary swaps with matching shapes also replay it (the
 DictStore pins residency in a ResolvedRootDict handle at publish time).
+
+Failure model (DESIGN.md "Failure model & recovery"): requests carry
+optional deadlines, the queue has optional cap-based admission control
+(``on_full="raise"|"shed"|"block"``), and the stemmer's dispatch/retire
+ring retries failed / timed-out / corrupted launches up to
+``max_retries`` before bisecting the tile to quarantine the poison
+request(s) — every terminal failure is returned through the finished
+table with a structured :class:`~repro.serve.faults.FailureInfo`
+instead of wedging the batch. Retire verifies a device-computed
+per-tile checksum on every path (the persistent kernel's completion
+flags generalised), and ``run_until_drained(on_undrained="raise")``
+cancels stranded requests so the engine stays reusable after the
+exception.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Protocol, runtime_checkable
 
@@ -47,6 +61,7 @@ import numpy as np
 
 from repro.core import alphabet as ab
 from repro.models import model as model_mod
+from repro.serve.faults import FailureInfo
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +90,12 @@ class Workload(Protocol):
     def pending_rids(self) -> list[int]:
         """rids of in-flight requests (for drain reports)."""
 
+    def expire(self, now: float) -> list:
+        """Fail + return in-flight requests whose deadline passed."""
+
+    def cancel_pending(self) -> list:
+        """Tear down all in-flight work; fail + return the requests."""
+
 
 # ---------------------------------------------------------------------------
 # drain accounting
@@ -85,7 +106,11 @@ class DrainReport:
 
     ticks: int
     drained: bool
-    pending: list[int]  # rids still queued or in flight
+    pending: list[int]   # rids still queued or in flight at max_ticks
+    cancelled: list = field(default_factory=list)
+    # rids cancelled+returned through finished (on_undrained="raise"
+    # tears stranded work down so the engine is reusable; each cancelled
+    # request carries a FailureInfo(code="cancelled"))
 
 
 class EngineUndrained(RuntimeError):
@@ -96,7 +121,12 @@ class EngineUndrained(RuntimeError):
         super().__init__(
             f"engine not drained after {report.ticks} ticks:"
             f" {len(report.pending)} request(s) unfinished"
-            f" (rids {report.pending})")
+            f" (rids {report.pending};"
+            f" {len(report.cancelled)} cancelled + returned)")
+
+
+class QueueFull(RuntimeError):
+    """submit() against a full queue under on_full="raise"."""
 
 
 # ---------------------------------------------------------------------------
@@ -108,19 +138,73 @@ class Engine:
     submit() validates through the workload and queues; step() admits
     while the workload has capacity, then runs one workload tick;
     finished requests move to the results table keyed by rid.
+
+    ``queue_cap`` bounds the *queued* (not yet admitted) requests;
+    submits against a full queue follow ``on_full``: "raise" rejects
+    with :class:`QueueFull`, "shed" finishes the request immediately
+    with ``FailureInfo(code="shed")`` (the overload-protection path —
+    the caller still gets a rid and a structured result), "block"
+    serves the backlog inline until a slot opens. ``deadline_s`` on
+    submit stamps an absolute deadline; expiry (checked each step,
+    whether the request is queued or in flight) finishes it with
+    ``FailureInfo(code="deadline")`` while later requests proceed.
     """
 
-    def __init__(self, workload: Workload):
+    ON_FULL = ("raise", "shed", "block")
+
+    def __init__(self, workload: Workload, *, queue_cap: int | None = None,
+                 on_full: str = "raise"):
+        if on_full not in self.ON_FULL:
+            raise ValueError(f"unknown on_full policy {on_full!r}"
+                             f" (choose from {self.ON_FULL})")
+        if queue_cap is not None and queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1, got {queue_cap}")
+        if on_full != "raise" and queue_cap is None:
+            raise ValueError(f"on_full={on_full!r} needs a queue_cap"
+                             " (an unbounded queue is never full)")
         self.workload = workload
         self.queue: list = []
         self.finished: dict[int, object] = {}
+        self.queue_cap = queue_cap
+        self.on_full = on_full
+        self.shed = 0            # requests rejected by admission control
         self._next_rid = 0
 
     # -- client API --------------------------------------------------------
-    def submit(self, payload, **opts) -> int:
+    def _queue_full(self) -> bool:
+        return (self.queue_cap is not None
+                and len(self.queue) >= self.queue_cap)
+
+    def submit(self, payload, *, deadline_s: float | None = None,
+               **opts) -> int:
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+        if self._queue_full():
+            if self.on_full == "raise":
+                raise QueueFull(
+                    f"queue at cap {self.queue_cap}; submit rejected"
+                    " (on_full='raise')")
+            if self.on_full == "block":
+                for _ in range(100_000):
+                    self.step()
+                    if not self._queue_full():
+                        break
+                else:
+                    raise RuntimeError(
+                        "on_full='block' made no progress against a full"
+                        " queue — the workload is wedged")
         req = self.workload.make_request(self._next_rid, payload, **opts)
         rid = self._next_rid
         self._next_rid += 1
+        if deadline_s is not None:
+            req.deadline = time.monotonic() + deadline_s
+        if self._queue_full():           # only reachable under "shed"
+            req.failure = FailureInfo(rid, "shed",
+                                      detail=f"queue at cap {self.queue_cap}")
+            req.done = True
+            self.finished[rid] = req
+            self.shed += 1
+            return rid
         self.queue.append(req)
         return rid
 
@@ -133,7 +217,25 @@ class Engine:
 
     # -- scheduling --------------------------------------------------------
     def step(self):
-        """One engine tick: admit while there is capacity, then tick."""
+        """One engine tick: expire deadlines, admit while there is
+        capacity, then tick the workload."""
+        now = time.monotonic()
+        if self.queue:
+            still = []
+            for req in self.queue:
+                dl = getattr(req, "deadline", None)
+                if dl is not None and now > dl:
+                    req.failure = FailureInfo(req.rid, "deadline",
+                                              detail="expired while queued")
+                    req.done = True
+                    self.finished[req.rid] = req
+                else:
+                    still.append(req)
+            self.queue = still
+        expire = getattr(self.workload, "expire", None)
+        if expire is not None:
+            for req in expire(now):
+                self.finished[req.rid] = req
         while self.queue and self.workload.has_capacity():
             self.workload.admit(self.queue.pop(0))
         for req in self.workload.tick():
@@ -144,9 +246,13 @@ class Engine:
         """Tick until queue + in-flight are empty, or max_ticks elapse.
 
         Hitting max_ticks with work outstanding never silently drops it:
-        on_undrained="raise" (default) raises EngineUndrained carrying
-        the report; "return" hands back the report with drained=False
-        and the unfinished rids, leaving the engine resumable.
+        on_undrained="raise" (default) cancels the stranded requests —
+        each lands in the finished table with FailureInfo(code=
+        "cancelled") — and raises EngineUndrained carrying the report
+        (pending + cancelled rids), leaving the engine empty and
+        reusable for new work; "return" hands back the report with
+        drained=False and the unfinished rids, leaving the queue and
+        in-flight work intact so the same drain can be resumed.
         """
         if on_undrained not in ("raise", "return"):
             raise ValueError(f"unknown on_undrained policy: {on_undrained!r}")
@@ -156,11 +262,26 @@ class Engine:
             ticks += 1
         pending = ([r.rid for r in self.queue]
                    + self.workload.pending_rids())
-        report = DrainReport(ticks=ticks, drained=not pending,
-                             pending=pending)
         if pending and on_undrained == "raise":
-            raise EngineUndrained(report)
-        return report
+            cancelled = []
+            for req in self.queue:
+                req.failure = FailureInfo(req.rid, "cancelled",
+                                          detail="undrained at max_ticks"
+                                                 " (still queued)")
+                req.done = True
+                self.finished[req.rid] = req
+                cancelled.append(req.rid)
+            self.queue = []
+            cancel = getattr(self.workload, "cancel_pending", None)
+            if cancel is not None:
+                for req in cancel():
+                    self.finished[req.rid] = req
+                    cancelled.append(req.rid)
+            raise EngineUndrained(DrainReport(ticks=ticks, drained=False,
+                                              pending=pending,
+                                              cancelled=cancelled))
+        return DrainReport(ticks=ticks, drained=not pending,
+                           pending=pending)
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +294,8 @@ class Request:
     max_new: int = 16
     tokens_out: list = field(default_factory=list)
     done: bool = False
+    deadline: float | None = None       # absolute time.monotonic() bound
+    failure: FailureInfo | None = None  # set iff terminally failed
 
 
 class LMDecodeWorkload:
@@ -241,6 +364,32 @@ class LMDecodeWorkload:
                 finished.append(self._finish_slot(slot, req))
         return finished
 
+    def expire(self, now: float) -> list[Request]:
+        """Free + fail slots whose request deadline passed; partial
+        tokens stay on the request for the caller to inspect."""
+        out = []
+        for slot in range(self.B):
+            req = self.slot_req[slot]
+            if (req is not None and req.deadline is not None
+                    and now > req.deadline):
+                req.failure = FailureInfo(
+                    req.rid, "deadline",
+                    detail=f"{len(req.tokens_out)}/{req.max_new} tokens"
+                           " decoded")
+                out.append(self._finish_slot(slot, req))
+        return out
+
+    def cancel_pending(self) -> list[Request]:
+        out = []
+        for slot in range(self.B):
+            req = self.slot_req[slot]
+            if req is not None:
+                req.failure = FailureInfo(
+                    req.rid, "cancelled",
+                    detail="slot torn down with the request decoding")
+                out.append(self._finish_slot(slot, req))
+        return out
+
     # -- decode machinery --------------------------------------------------
     def _prefill_into_slot(self, slot: int, req: Request):
         """Prompt tokens run through decode steps into this slot's cache.
@@ -299,9 +448,11 @@ class StemRequest:
     roots: np.ndarray          # int32 [n, 4] zero-padded char codes
     sources: np.ndarray        # int32 [n] pyref.SRC_* tags
     dict_versions: np.ndarray  # int32 [n] DictStore version per word
-    dispatched: int = 0        # words launched (possibly still in flight)
+    dispatched: int = 0        # words claimed by a launch (or retry group)
     served: int = 0            # words completed (results scattered back)
     done: bool = False
+    deadline: float | None = None       # absolute time.monotonic() bound
+    failure: FailureInfo | None = None  # set iff terminally failed
 
     @property
     def n_words(self) -> int:
@@ -329,9 +480,18 @@ class InflightTile:
     sources_dev: object        # device int32 [launch_b]
     slot: int                  # staging-buffer ring slot held until retire
     flags_dev: object = None   # persistent mode: int32 [n_tiles] completion
+    checksums_dev: object = None  # int32 [n_tiles] device-computed per-tile
+    retries: int = 0           # retry generation of this dispatch
+    t_dispatch: float = 0.0    # launch_timeout_s accounting
 
     def is_ready(self) -> bool:
-        """True once the device arrays can be fetched without blocking."""
+        """True once the device arrays can be fetched without blocking.
+
+        checksums_dev is never polled: it is an output of the SAME XLA
+        program as roots/sources (with_checksum= fuses the fold into the
+        launch), so it is ready exactly when they are — and the retire
+        tick busy-polls this, so every extra is_ready() call here is paid
+        hundreds of times per drain."""
         try:
             return bool(self.roots_dev.is_ready()
                         and self.sources_dev.is_ready()
@@ -339,6 +499,21 @@ class InflightTile:
                              or self.flags_dev.is_ready()))
         except AttributeError:   # backend without readiness introspection
             return True
+
+
+@dataclass
+class RetryGroup:
+    """A claimed segment set awaiting (re-)dispatch.
+
+    Segments are ``(req, req_start, count)`` — tile offsets are assigned
+    at dispatch time, since a retried group repacks from the front of a
+    fresh staging slot. ``retries`` counts failed dispatch attempts;
+    ``not_before`` implements the retry backoff.
+    """
+
+    segments: list             # [(req, req_start, count)]
+    retries: int = 0
+    not_before: float = 0.0
 
 
 class StemmerWorkload:
@@ -381,6 +556,22 @@ class StemmerWorkload:
     kernel — and retire additionally checks the per-tile completion
     flags against the pinned dict version (the device-side proof that
     every descriptor retired under the version acquired at dispatch).
+
+    Fault tolerance: ``checksum=True`` (default) computes a per-tile
+    int32 checksum over (roots, sources) on device at dispatch and
+    re-derives it on the host copies at retire — a mismatch (torn
+    readback, injected corruption) discards the launch and re-dispatches
+    its words. A launch that raises, times out (``launch_timeout_s``),
+    or fails the checksum is retried up to ``max_retries`` times (with
+    exponential ``retry_backoff_s`` between attempts); a group that
+    keeps failing is *bisected* — its segment list split in half, each
+    half retried independently — until single-request groups that still
+    fail are quarantined with ``FailureInfo(code="quarantined")`` while
+    the rest of the batch completes. ``max_retries=0`` restores the
+    strict pre-fault-tolerance contract: the first failure unwinds the
+    claims and propagates. ``injector`` accepts a
+    :class:`~repro.serve.faults.FaultInjector` (None = no fault layer on
+    the hot path).
     """
 
     def __init__(self, store, *, block_b: int = 256, infix: bool = True,
@@ -389,6 +580,9 @@ class StemmerWorkload:
                  max_inflight: int = 2, data_devices: int = 1,
                  megabatch_tiles: int = 1, persistent: bool = False,
                  max_requests: int | None = None,
+                 max_retries: int = 2, retry_backoff_s: float = 0.0,
+                 launch_timeout_s: float | None = None,
+                 checksum: bool = True, injector=None,
                  interpret: bool | None = None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
@@ -402,6 +596,14 @@ class StemmerWorkload:
                 "persistent=True is single-device (the descriptor ring is"
                 " one kernel's SMEM); use megabatch_tiles for multi-device"
                 " coalescing")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if retry_backoff_s < 0:
+            raise ValueError(
+                f"retry_backoff_s must be >= 0, got {retry_backoff_s}")
+        if launch_timeout_s is not None and launch_timeout_s <= 0:
+            raise ValueError(
+                f"launch_timeout_s must be > 0, got {launch_timeout_s}")
         self.store = store
         self.block_b = block_b
         self.infix = infix
@@ -414,12 +616,24 @@ class StemmerWorkload:
         self.megabatch_tiles = megabatch_tiles
         self.persistent = persistent
         self.max_requests = max_requests
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.launch_timeout_s = launch_timeout_s
+        self.checksum = checksum
+        self.injector = injector
         self.interpret = interpret
         self.super_b = block_b * data_devices
         self.launch_b = self.super_b * megabatch_tiles
         self.inflight: list[StemRequest] = []
         self.ring: list[InflightTile] = []
+        self._requeue: list[RetryGroup] = []
         self.ticks_launched = 0   # megakernel launches (not engine ticks)
+        # fault-path accounting (tests + benchmarks/recovery.py read these)
+        self.retries_total = 0    # failed dispatch attempts charged
+        self.bisections = 0       # groups split after exhausting retries
+        self.quarantined = 0      # requests isolated with FailureInfo
+        self.timeouts = 0         # launches abandoned at launch_timeout_s
+        self.checksum_failures = 0  # retires discarded on checksum mismatch
         self._mesh = None
         if data_devices > 1:
             from repro.launch import mesh as mesh_mod
@@ -483,7 +697,10 @@ class StemmerWorkload:
                     self._retire(self.ring.pop(0))
         finished, still = [], []
         for req in self.inflight:
-            if req.served >= req.n_words:   # includes empty requests
+            if req.failure is not None:     # quarantined mid-flight
+                req.done = True
+                finished.append(req)
+            elif req.served >= req.n_words:  # includes empty requests
                 req.done = True
                 finished.append(req)
             else:
@@ -491,21 +708,70 @@ class StemmerWorkload:
         self.inflight = still
         return finished
 
+    def expire(self, now: float) -> list[StemRequest]:
+        """Fail + hand back in-flight requests past their deadline.
+
+        Words of an expired request still riding a launch are dropped at
+        retire (the scatter skips failed requests); partial results up
+        to ``served`` stay on the request for the caller to inspect.
+        """
+        out, still = [], []
+        for req in self.inflight:
+            if (req.failure is None and req.deadline is not None
+                    and now > req.deadline):
+                req.failure = FailureInfo(
+                    req.rid, "deadline",
+                    detail=f"{req.served}/{req.n_words} words served")
+                req.done = True
+                out.append(req)
+            else:
+                still.append(req)
+        self.inflight = still
+        return out
+
+    def cancel_pending(self) -> list[StemRequest]:
+        """Tear down the ring + retry queue; fail every in-flight
+        request with FailureInfo(code="cancelled") and return them."""
+        for entry in self.ring:
+            self._free_slots.append(entry.slot)
+        self.ring = []
+        self._requeue = []
+        out = []
+        for req in self.inflight:
+            if req.failure is None:
+                req.failure = FailureInfo(
+                    req.rid, "cancelled",
+                    detail=f"{req.served}/{req.n_words} words served")
+            req.done = True
+            out.append(req)
+        self.inflight = []
+        return out
+
     # -- dispatch side -----------------------------------------------------
     def _has_undispatched(self) -> bool:
-        return any(req.n_words > req.dispatched for req in self.inflight)
+        return bool(self._requeue) or any(
+            req.n_words > req.dispatched for req in self.inflight
+            if req.failure is None)
 
-    def _coalesce(self) -> list[tuple[StemRequest, int, int, int]]:
-        """FIFO-fill one megabatch (up to ``megabatch_tiles`` super-tiles)
-        with *undispatched* words:
-        -> [(req, req_start, tile_start, count)]."""
+    def _coalesce(self) -> list[tuple[StemRequest, int, int]]:
+        """FIFO-claim one megabatch (up to ``megabatch_tiles``
+        super-tiles) of undispatched words: -> [(req, req_start, count)].
+
+        Claiming advances ``req.dispatched`` immediately — a failed
+        launch keeps its words through the RetryGroup rather than
+        releasing them for re-coalescing (which could double-dispatch
+        against an in-flight retry).
+        """
         segments, fill = [], 0
         for req in self.inflight:
+            if req.failure is not None:
+                continue
             if fill >= self.launch_b:
                 break
             take = min(req.n_words - req.dispatched, self.launch_b - fill)
             if take > 0:
-                segments.append((req, req.dispatched, fill, take))
+                segments.append((req, req.dispatched, take))
+                req.dispatched += take
                 fill += take
         return segments
 
@@ -520,90 +786,202 @@ class StemmerWorkload:
             bucket *= 2
         return min(bucket, self.megabatch_tiles) * self.super_b
 
+    def _next_group(self) -> RetryGroup | None:
+        """The next dispatchable group: an eligible retry first (FIFO),
+        else a freshly coalesced one. Drops segments of requests that
+        failed while their group waited."""
+        now = time.monotonic()
+        found, keep = None, []
+        for grp in self._requeue:
+            grp.segments = [(req, r0, take) for req, r0, take in grp.segments
+                            if req.failure is None]
+            if not grp.segments:
+                continue                # everything in it already failed
+            if found is None and grp.not_before <= now:
+                found = grp
+            else:
+                keep.append(grp)
+        self._requeue = keep
+        if found is not None:
+            return found
+        segments = self._coalesce()
+        return RetryGroup(segments) if segments else None
+
     def _fill_ring(self) -> int:
-        """Dispatch until max_inflight launches are outstanding or no
-        undispatched words remain; returns the number of launches."""
+        """Dispatch until max_inflight launches are outstanding or
+        nothing is dispatchable; returns the number of launches."""
         n = 0
+        waited = False
         while len(self.ring) < self.max_inflight:
-            segments = self._coalesce()
-            if not segments:
+            grp = self._next_group()
+            if grp is None:
+                if self._requeue and not self.ring and not waited:
+                    # every retryable group is backing off and nothing
+                    # else is in flight: wait out the soonest backoff —
+                    # once per tick, so a repeatedly failing group burns
+                    # at most ~one retry per tick instead of sleeping
+                    # through its whole quarantine budget here
+                    wait = (min(g.not_before for g in self._requeue)
+                            - time.monotonic())
+                    if wait > 0:
+                        time.sleep(wait)
+                    waited = True
+                    continue
                 break
-            self._dispatch(segments)
-            n += 1
+            n += self._dispatch_group(grp)
         return n
 
-    def _dispatch(self, segments):
+    def _launch_failed(self, grp: RetryGroup, exc: BaseException) -> int:
+        """Shared failure path for dispatch errors, timeouts, and retire
+        checksum mismatches: retry with backoff, bisect after
+        ``max_retries``, quarantine single-request leaves."""
+        if self.max_retries == 0:
+            # strict mode: unwind the claims so every word is
+            # re-coalesced from scratch, and propagate to the caller
+            for req, _r0, take in grp.segments:
+                req.dispatched -= take
+            raise exc
+        grp.retries += 1
+        self.retries_total += 1
+        if grp.retries > self.max_retries:
+            if len(grp.segments) > 1:
+                # the whole group keeps failing: split it so a poison
+                # request is isolated in O(log segments) rounds while
+                # the healthy halves complete
+                mid = len(grp.segments) // 2
+                self.bisections += 1
+                self._requeue.append(RetryGroup(grp.segments[:mid]))
+                self._requeue.append(RetryGroup(grp.segments[mid:]))
+            else:
+                (req, _r0, _take), = grp.segments
+                req.failure = FailureInfo(
+                    req.rid, "quarantined", retries=grp.retries,
+                    detail=str(exc))
+                self.quarantined += 1
+        else:
+            backoff = self.retry_backoff_s * (2 ** (grp.retries - 1))
+            grp.not_before = time.monotonic() + backoff
+            self._requeue.append(grp)
+        return 0
+
+    def _dispatch_group(self, grp: RetryGroup) -> int:
+        """Launch one group; returns 1 on success, 0 when the failure
+        was absorbed into the retry machinery."""
         from repro.kernels import ops  # lazy: keep engine import light
 
+        if self.injector is not None:
+            try:
+                self.injector.on_dispatch(
+                    rids=[req.rid for req, _r0, _take in grp.segments])
+            except Exception as e:
+                return self._launch_failed(grp, e)
         dv = self.store.acquire()       # one version per megabatch launch
         slot = self._free_slots.pop()
         tile = self._staging[slot]
-        fill = 0
-        for req, r0, t0, take in segments:
-            tile[t0:t0 + take] = req.words[r0:r0 + take]
-            fill = t0 + take
+        placed, fill = [], 0
+        for req, r0, take in grp.segments:
+            tile[fill:fill + take] = req.words[r0:r0 + take]
+            placed.append((req, r0, fill, take))
+            fill += take
         rows = self._bucket_rows(fill)
         tile[fill:rows] = 0             # padded words must stay empty
-        flags = None
+        flags = checksums = None
+        # with_checksum fuses the per-tile integrity row into the
+        # launch's own jit scope (verified against a host recompute at
+        # retire) — fault tolerance costs no extra XLA dispatch
+        cs = self.checksum
         try:
             if self._mesh is not None:
-                roots, sources = ops.extract_roots_sharded(
+                out = ops.extract_roots_sharded(
                     jnp.asarray(tile[:rows]), dv.handle, self._mesh,
                     infix=self.infix, match=self.match, block_b=self.block_b,
                     dict_block_r=self.dict_block_r,
                     num_buffers=self.num_buffers, skip_index=self.skip_index,
-                    interpret=self.interpret)
+                    with_checksum=cs, interpret=self.interpret)
+                roots, sources = out[0], out[1]
             elif self.persistent:
-                roots, sources, flags = ops.extract_roots_persistent(
+                out = ops.extract_roots_persistent(
                     jnp.asarray(tile[:rows]), dv.handle, infix=self.infix,
                     match=self.match, block_b=self.block_b,
                     dict_block_r=self.dict_block_r,
                     num_buffers=self.num_buffers, skip_index=self.skip_index,
-                    version_slot=dv.version, interpret=self.interpret)
-            else:
-                roots, sources = ops.extract_roots_fused(
-                    jnp.asarray(tile[:rows]), dv.handle, infix=self.infix,
-                    match=self.match, block_b=self.block_b,
-                    dict_block_r=self.dict_block_r,
-                    num_buffers=self.num_buffers, skip_index=self.skip_index,
+                    version_slot=dv.version, with_checksum=cs,
                     interpret=self.interpret)
-        except BaseException:
+                roots, sources, flags = out[0], out[1], out[2]
+            else:
+                out = ops.extract_roots_fused(
+                    jnp.asarray(tile[:rows]), dv.handle, infix=self.infix,
+                    match=self.match, block_b=self.block_b,
+                    dict_block_r=self.dict_block_r,
+                    num_buffers=self.num_buffers, skip_index=self.skip_index,
+                    with_checksum=cs, interpret=self.interpret)
+                roots, sources = out[0], out[1]
+            if cs:
+                checksums = out[-1]
+        except BaseException as e:
             # a failed launch must not wedge the engine: return the slot
-            # and leave every word undispatched so a later tick retries
+            # and route the group through the retry machinery (strict
+            # mode re-raises with the words unclaimed)
             self._free_slots.append(slot)
-            raise
-        for req, _r0, _t0, take in segments:
-            req.dispatched += take      # only a successful launch counts
-        entry = InflightTile(segments, dv.version, roots, sources, slot,
-                             flags)
+            if isinstance(e, (KeyboardInterrupt, SystemExit)):
+                raise
+            return self._launch_failed(grp, e)
+        entry = InflightTile(placed, dv.version, roots, sources, slot,
+                             flags, checksums_dev=checksums,
+                             retries=grp.retries,
+                             t_dispatch=time.monotonic())
         try:                            # start D2H early; retire just reads
             roots.copy_to_host_async()
             sources.copy_to_host_async()
             if flags is not None:
                 flags.copy_to_host_async()
+            if checksums is not None:
+                checksums.copy_to_host_async()
         except AttributeError:
             pass
         self.ring.append(entry)
         self.ticks_launched += 1
+        return 1
 
     # -- retire side -------------------------------------------------------
     def _retire_ready(self) -> int:
-        """Retire every in-flight launch whose results are ready, oldest
-        first, without blocking; returns the number retired."""
+        """Retire every in-flight launch whose results are ready (and
+        abandon any past ``launch_timeout_s``), oldest first, without
+        blocking; returns the number processed."""
         still, n = [], 0
+        now = time.monotonic()
         for entry in self.ring:
             if entry.is_ready():
                 self._retire(entry)
+                n += 1
+            elif (self.launch_timeout_s is not None
+                  and now - entry.t_dispatch > self.launch_timeout_s):
+                # abandon the launch: drop the device refs, free the
+                # slot, and re-dispatch its words through the retry path
+                self.timeouts += 1
+                self._free_slots.append(entry.slot)
+                grp = RetryGroup([(req, r0, take) for req, r0, _t0, take
+                                  in entry.segments], retries=entry.retries)
+                self._launch_failed(grp, TimeoutError(
+                    f"launch exceeded launch_timeout_s="
+                    f"{self.launch_timeout_s}"))
                 n += 1
             else:
                 still.append(entry)
         self.ring = still
         return n
 
-    def _retire(self, entry: InflightTile):
-        """Scatter one launch's results back (blocks if not yet ready)."""
+    def _retire(self, entry: InflightTile) -> bool:
+        """Scatter one launch's results back (blocks if not yet ready).
+
+        Returns False when the tile failed checksum verification and was
+        re-queued for redispatch instead of scattered.
+        """
         roots = np.asarray(entry.roots_dev)
         sources = np.asarray(entry.sources_dev)
+        self._free_slots.append(entry.slot)
+        if self.injector is not None:
+            roots, sources = self.injector.on_retire(roots, sources)
         if entry.flags_dev is not None:
             # descriptor-ring integrity: every tile of the persistent
             # launch must have completed under the version pinned at
@@ -613,12 +991,33 @@ class StemmerWorkload:
                 raise RuntimeError(
                     "persistent launch retired with bad completion flags:"
                     f" expected {1 + entry.version}, got {flags.tolist()}")
+        if entry.checksums_dev is not None:
+            from repro.kernels import ops
+
+            want = np.asarray(entry.checksums_dev)
+            got = ops.tile_checksum_host(roots, sources,
+                                         block_b=self.block_b)
+            if not np.array_equal(got, want):
+                bad = np.nonzero(got != want)[0].tolist()
+                err = RuntimeError(
+                    f"retire checksum mismatch on tile(s) {bad} of"
+                    f" {want.shape[0]} (device vs host copy) — discarding"
+                    " the launch")
+                if self.max_retries == 0:
+                    raise err
+                self.checksum_failures += 1
+                grp = RetryGroup([(req, r0, take) for req, r0, _t0, take
+                                  in entry.segments], retries=entry.retries)
+                self._launch_failed(grp, err)
+                return False
         for req, r0, t0, take in entry.segments:
+            if req.failure is not None:   # expired/cancelled mid-flight
+                continue
             req.roots[r0:r0 + take] = roots[t0:t0 + take]
             req.sources[r0:r0 + take] = sources[t0:t0 + take]
             req.dict_versions[r0:r0 + take] = entry.version
             req.served += take
-        self._free_slots.append(entry.slot)
+        return True
 
 
 # ---------------------------------------------------------------------------

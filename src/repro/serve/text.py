@@ -45,7 +45,17 @@ class TextRequest(StemRequest):
     n_bytes: int = 0                           # utf-8 bytes across docs
 
     def analyses(self) -> list[list[tuple[str, int, tuple[int, int]]]]:
-        """Per-document [(root, source, (byte_start, byte_end))]."""
+        """Per-document [(root, source, (byte_start, byte_end))].
+
+        A terminally failed request (quarantined / deadline / shed /
+        cancelled — ``self.failure`` is set) holds zero-filled roots for
+        its unserved words; reading analyses off it would silently
+        return garbage, so it raises instead — check ``failure`` first.
+        """
+        if self.failure is not None:
+            raise RuntimeError(
+                f"request {self.rid} failed ({self.failure.code}:"
+                f" {self.failure.detail}); no analyses to read")
         out: list[list] = [[] for _ in self.docs]
         for i in range(self.n_words):
             out[int(self.doc_ids[i])].append(

@@ -222,6 +222,29 @@ def test_checkpoint_resume_bit_identical(dict_and_vocab, table, tmp_path):
     assert resumed.dict_versions == (0, 0, 0)
 
 
+def test_checkpoint_manifest_records_content_hashes(dict_and_vocab, table,
+                                                    tmp_path):
+    """Every checkpointed chunk carries a content hash in the manifest
+    (schema 2), and the hash matches the partial actually on disk —
+    the integrity contract torn-checkpoint recovery relies on (the
+    fault-driven recovery paths live in test_serve_faults.py)."""
+    import json
+    import os
+
+    from repro.index import builder as bld
+
+    arrays, _ = dict_and_vocab
+    ckpt = tmp_path / "ckpt"
+    ix.build_corpus_index(_stream(table), arrays, checkpoint_dir=str(ckpt),
+                          block_b=512, block_w=512)
+    man = json.loads((ckpt / "manifest.json").read_text())
+    assert man["schema"] == bld.MANIFEST_SCHEMA == 2
+    assert len(man["chunks"]) == 3
+    for rec in man["chunks"]:
+        path = os.path.join(str(ckpt), f"chunk_{rec['i']:06d}.npz")
+        assert bld._file_sha(path) == rec["sha"]
+
+
 def test_resume_rejects_divergent_stream(dict_and_vocab, table, tmp_path):
     arrays, _ = dict_and_vocab
     ckpt = str(tmp_path / "ckpt")

@@ -150,6 +150,31 @@ SCRIPT = textwrap.dedent("""
         np.testing.assert_array_equal(req.roots, np.asarray(want_r))
         np.testing.assert_array_equal(req.sources, np.asarray(want_s))
     print("TEXT_SHARD_OK")
+
+    # --- sharded retry parity: an injected launch failure on the first
+    # sharded dispatch is retried and the drain stays bit-identical ----
+    from repro.serve import FaultInjector, FaultPlan, FaultSpec
+
+    inj = FaultInjector(FaultPlan(specs=(FaultSpec("dispatch", at=0),)))
+    store = DictStore(arrays)
+    eng = Engine(StemmerWorkload(store, block_b=16, data_devices=4,
+                                 max_inflight=2, injector=inj))
+    sizes = (37, 64, 5, 50)
+    off, rids = 0, []
+    for n in sizes:
+        rids.append(eng.submit(enc[off:off + n])); off += n
+    rep = eng.run_until_drained()
+    assert rep.drained
+    assert eng.workload.retries_total == 1
+    assert inj.fired == [("dispatch", "fail", 0)]
+    want_r, want_s = stemmer.stem_batch(jnp.asarray(enc[:sum(sizes)]),
+                                        arrays)
+    got_r = np.concatenate([eng.result(r).roots for r in rids])
+    got_s = np.concatenate([eng.result(r).sources for r in rids])
+    np.testing.assert_array_equal(got_r, np.asarray(want_r))
+    np.testing.assert_array_equal(got_s, np.asarray(want_s))
+    assert all(eng.result(r).failure is None for r in rids)
+    print("SHARD_RETRY_OK")
 """)
 
 
@@ -161,7 +186,8 @@ def test_sharded_serve_four_devices():
                           capture_output=True, text=True, timeout=600)
     for marker in ("SHARD_BATCH_PARITY_OK", "SHARD_PIPELINE_KNOBS_OK",
                    "SHARD_SERVE_PARITY_OK", "SHARD_SWAP_OK",
-                   "SHARD_MEGABATCH_OK", "TEXT_SHARD_OK"):
+                   "SHARD_MEGABATCH_OK", "TEXT_SHARD_OK",
+                   "SHARD_RETRY_OK"):
         assert marker in proc.stdout, proc.stderr[-2000:]
 
 

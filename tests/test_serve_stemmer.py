@@ -186,14 +186,17 @@ def test_trickle_feed_keeps_launches_in_flight(dict_and_words):
 
 def test_failed_launch_leaves_engine_recoverable(dict_and_words,
                                                  monkeypatch):
-    """A kernel launch that raises must not wedge the engine: the
-    staging slot returns to the ring and the words stay undispatched,
-    so the next tick retries and the engine still drains."""
+    """A kernel launch that raises must not wedge the engine. In strict
+    mode (max_retries=0) the exception propagates but the staging slot
+    returns to the ring and the words stay undispatched, so the next
+    tick retries and the engine still drains; with retries enabled
+    (the default) the same failure is absorbed entirely."""
     from repro.kernels import ops
 
     arrays, enc = dict_and_words
     store = DictStore(arrays)
-    eng = Engine(StemmerWorkload(store, block_b=16, max_inflight=2))
+    eng = Engine(StemmerWorkload(store, block_b=16, max_inflight=2,
+                                 max_retries=0))
     rids = [eng.submit(enc[i * 16:(i + 1) * 16]) for i in range(3)]
 
     real = ops.extract_roots_fused
@@ -215,6 +218,16 @@ def test_failed_launch_leaves_engine_recoverable(dict_and_words,
     want_r, _ = stemmer.stem_batch(jnp.asarray(enc[:48]), arrays)
     got_r = np.concatenate([eng.result(r).roots for r in rids])
     np.testing.assert_array_equal(got_r, np.asarray(want_r))
+
+    # default mode: the retry machinery absorbs the same transient
+    # failure — no exception reaches the caller, results bit-identical
+    eng2 = Engine(StemmerWorkload(store, block_b=16, max_inflight=2))
+    rids2 = [eng2.submit(enc[i * 16:(i + 1) * 16]) for i in range(3)]
+    boom["armed"] = True
+    rep2 = eng2.run_until_drained()
+    assert rep2.drained and eng2.workload.retries_total == 1
+    got2 = np.concatenate([eng2.result(r).roots for r in rids2])
+    np.testing.assert_array_equal(got2, np.asarray(want_r))
 
 
 def test_overlap_parity_with_sync(dict_and_words):
@@ -416,20 +429,38 @@ def test_publish_delta_validates(dict_and_words):
 def test_run_until_drained_surfaces_unfinished(dict_and_words):
     arrays, enc = dict_and_words
     store = DictStore(arrays)
-    eng = Engine(StemmerWorkload(store, block_b=16))
-    rids = [eng.submit(enc[:40]), eng.submit(enc[40:80])]
-
-    with pytest.raises(EngineUndrained) as exc:
-        eng.run_until_drained(max_ticks=1)  # 80 words need 5 ticks
-    report = exc.value.report
-    assert not report.drained and report.ticks == 1
-    assert set(report.pending) == set(rids)
 
     # "return" policy hands back the report and leaves the engine resumable
-    partial = eng.run_until_drained(max_ticks=1, on_undrained="return")
+    eng = Engine(StemmerWorkload(store, block_b=16))
+    rids = [eng.submit(enc[:40]), eng.submit(enc[40:80])]
+    partial = eng.run_until_drained(max_ticks=1,  # 80 words need 5 ticks
+                                    on_undrained="return")
     assert isinstance(partial, DrainReport) and not partial.drained
+    assert partial.ticks == 1 and partial.pending
     final = eng.run_until_drained()
     assert final.drained and final.pending == []
-    assert all(eng.result(r).done for r in rids)
+    assert all(eng.result(r).done and eng.result(r).failure is None
+               for r in rids)
     with pytest.raises(ValueError, match="on_undrained"):
         eng.run_until_drained(on_undrained="ignore")
+
+    # "raise" policy cancels the stranded requests — each lands in the
+    # finished table with FailureInfo("cancelled") — so the engine is
+    # empty and reusable afterwards, not wedged mid-drain
+    eng2 = Engine(StemmerWorkload(store, block_b=16))
+    rids2 = [eng2.submit(enc[:40]), eng2.submit(enc[40:80])]
+    with pytest.raises(EngineUndrained) as exc:
+        eng2.run_until_drained(max_ticks=1)
+    report = exc.value.report
+    assert not report.drained and report.ticks == 1
+    assert set(report.pending) == set(rids2)
+    assert set(report.cancelled) == set(rids2)
+    for r in rids2:
+        req = eng2.result(r)
+        assert req.done and req.failure.code == "cancelled"
+    assert not eng2.queue and eng2.workload.active == 0
+    rid3 = eng2.submit(enc[:16])            # fresh work still serves
+    assert eng2.run_until_drained().drained
+    want_r, _ = stemmer.stem_batch(jnp.asarray(enc[:16]), arrays)
+    np.testing.assert_array_equal(eng2.result(rid3).roots,
+                                  np.asarray(want_r))
