@@ -1,6 +1,6 @@
 """Recovery benchmark: what a fault costs the serving path.
 
-Per queue depth, four rows:
+Per queue depth, the fault rows:
 
   recovery_baseline_q{qd}        fault-free drain (the denominator)
   recovery_dispatch_fault_q{qd}  one injected launch failure mid-drain;
@@ -16,19 +16,41 @@ Per queue depth, four rows:
                                  fraction rejected by admission control,
                                  ``served`` the requests that completed
 
+plus the crash-safety rows (DESIGN.md §12):
+
+  recovery_warm_restart_q{qd}    journaled engine killed mid-drain;
+                                 ``warm_restart_s`` is Engine.recover +
+                                 the replay drain, ``identical`` asserts
+                                 (pre-crash + recovered) == fault-free
+  recovery_journal_overhead_q{qd} the same drain with and without the
+                                 write-ahead journal on the submit path,
+                                 at >= 256 words/request (the journal's
+                                 cost is per request, so the tax is
+                                 quoted at a realistic request size);
+                                 ``overhead_frac`` is the throughput tax
+                                 (CI bounds it at 5%)
+  recovery_rung_{label}_q{qd}    fault-free throughput at each rung of
+                                 the degradation ladder (persistent,
+                                 megabatch, per-tile, streamed-dict) —
+                                 what a downshift costs
+
 CI checks the recovery section exists in the smoke record, that every
-faulted row recovered bit-identically, and that the shed row actually
-shed (admission control engaged, served + shed == submitted).
+faulted row recovered bit-identically, that the shed row actually shed
+(admission control engaged, served + shed == submitted), that the warm
+restart is bit-identical, the journal tax is within 5%, and that at
+least three ladder rungs have positive throughput.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 import numpy as np
 
 from repro.core import corpus, stemmer
 from repro.serve import (DictStore, Engine, FaultInjector, FaultPlan,
-                         FaultSpec, StemmerWorkload)
+                         FaultSpec, Journal, StemmerWorkload, build_ladder)
 
 
 def _drain(arrays, enc, qd, wpr, *, block_b, injector=None, engine_kw=None,
@@ -105,6 +127,94 @@ def run(*, queue_depths=(8, 32), words_per_request=64, block_b=64,
                          us_per_call=dt * 1e6, queue_depth=qd,
                          queue_cap=cap, shed=eng.shed, served=served,
                          shed_rate=eng.shed / qd))
+
+        # -- warm restart: kill a journaled drain mid-stream, recover --
+        with tempfile.TemporaryDirectory() as td:
+            jp = os.path.join(td, "wal.jsonl")
+            eng = Engine(StemmerWorkload(DictStore(arrays),
+                                         block_b=block_b, max_inflight=2),
+                         journal=Journal(jp))
+            rids = [eng.submit(enc[i * words_per_request:
+                                   (i + 1) * words_per_request])
+                    for i in range(qd)]
+            for _ in range(2):
+                eng.step()                    # serve a little, then die
+            done_before = {r: eng.result(r) for r in rids
+                           if eng.result(r) is not None}
+            t0 = time.perf_counter()
+            eng2 = Engine.recover(jp, StemmerWorkload(DictStore(arrays),
+                                                      block_b=block_b,
+                                                      max_inflight=2))
+            eng2.run_until_drained()
+            warm = time.perf_counter() - t0
+            merged = [done_before.get(r) or eng2.result(r) for r in rids]
+            identical = all(
+                m is not None and m.failure is None
+                and b is not None and np.array_equal(m.roots, b)
+                for m, b in zip(merged, baseline))
+            rows.append(dict(name=f"recovery_warm_restart_q{qd}",
+                             us_per_call=warm * 1e6, queue_depth=qd,
+                             warm_restart_s=warm,
+                             replayed=len(eng2.recovery.replayed),
+                             identical=identical))
+
+        # -- journal overhead: the WAL's tax on a clean drain ----------
+        # best-of-3 on BOTH sides so one scheduler hiccup cannot fake a
+        # tax; fsync batching left at the default (the row measures the
+        # serving path an operator actually runs). The journal's cost
+        # is per-REQUEST (one admit + one retire append), so the tax is
+        # quoted at a production-representative request size — smoke
+        # mode's 16-word toy requests would put a ~60us append next to
+        # a ~400us serve and read as a fake double-digit tax.
+        wpr_ovh = max(words_per_request, 256)
+        words_ovh, _, _ = corpus.build_corpus(n_words=qd * wpr_ovh, seed=1)
+        enc_ovh = corpus.encode_corpus(words_ovh)
+        _drain(arrays, enc_ovh, qd, wpr_ovh, block_b=block_b)  # warm
+        off_dt = min(_drain(arrays, enc_ovh, qd, wpr_ovh,
+                            block_b=block_b)[2] for _ in range(3))
+        on_dts = []
+        for _ in range(3):
+            with tempfile.TemporaryDirectory() as td:
+                jr = Journal(os.path.join(td, "wal.jsonl"))
+                on_dts.append(_drain(arrays, enc_ovh, qd, wpr_ovh,
+                                     block_b=block_b,
+                                     engine_kw=dict(journal=jr))[2])
+                jr.close()
+        on_dt = min(on_dts)
+        rows.append(dict(name=f"recovery_journal_overhead_q{qd}",
+                         us_per_call=on_dt * 1e6, queue_depth=qd,
+                         words_per_request=wpr_ovh,
+                         wps_journal_on=qd * wpr_ovh / on_dt,
+                         wps_journal_off=qd * wpr_ovh / off_dt,
+                         overhead_frac=max(0.0, on_dt / off_dt - 1.0)))
+
+        # -- per-rung throughput: what each ladder downshift costs -----
+        rungs = build_ladder(persistent=True, megabatch_tiles=2,
+                             data_devices=1, resident_dict=True)
+        for mode in rungs:
+            wl_kw = dict(persistent=mode.persistent,
+                         megabatch_tiles=mode.megabatch_tiles)
+            eng, rids, best = None, None, None
+            for _ in range(iters):
+                eng = Engine(StemmerWorkload(DictStore(arrays),
+                                             block_b=block_b,
+                                             max_inflight=2, **wl_kw))
+                eng.workload.residency_override = mode.residency
+                t0 = time.perf_counter()
+                rids = [eng.submit(enc[i * words_per_request:
+                                       (i + 1) * words_per_request])
+                        for i in range(qd)]
+                eng.run_until_drained()
+                dt = time.perf_counter() - t0
+                best = dt if best is None else min(best, dt)
+            got = _roots(eng, rids)
+            identical = all(g is not None and np.array_equal(g, b)
+                            for g, b in zip(got, baseline))
+            label = mode.label.replace(" ", "_")
+            rows.append(dict(name=f"recovery_rung_{label}_q{qd}",
+                             us_per_call=best * 1e6, queue_depth=qd,
+                             rung=mode.label, wps=n_words / best,
+                             identical=identical))
     return rows
 
 
@@ -120,6 +230,19 @@ def main(**kw):
                   f"recovery_{r['recovery_latency_us']:.0f}us"
                   f"_retries_{r['retries']}"
                   f"_identical_{r['identical']}")
+        elif "warm_restart_s" in r:
+            print(f"{r['name']},{r['us_per_call']:.3f},"
+                  f"warm_{r['warm_restart_s'] * 1e3:.1f}ms"
+                  f"_replayed_{r['replayed']}"
+                  f"_identical_{r['identical']}")
+        elif "overhead_frac" in r:
+            print(f"{r['name']},{r['us_per_call']:.3f},"
+                  f"journal_tax_{r['overhead_frac'] * 100:.1f}pct"
+                  f"_on_{r['wps_journal_on']:.0f}"
+                  f"_off_{r['wps_journal_off']:.0f}Wps")
+        elif "rung" in r:
+            print(f"{r['name']},{r['us_per_call']:.3f},"
+                  f"{r['wps']:.1f}Wps_identical_{r['identical']}")
         else:
             print(f"{r['name']},{r['us_per_call']:.3f},"
                   f"{r['wps']:.1f}Wps_baseline")

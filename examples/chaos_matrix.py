@@ -16,20 +16,37 @@ checkpoint directory.
   checkpoint  torn index-partial write -> readback verify + rewrite,
               index bit-identical; plus a poison-pill request isolated
               by bisection quarantine while its tile-mates complete
+  stall       wedged persistent descriptor ring -> watchdog abandons the
+              launch, salvages the retired-prefix tiles, re-dispatches
+              the rest down the megabatch path, bit-identical
+  device_loss sharded launch loses a device -> the degradation ladder
+              reshards onto fewer data devices (capped: the device does
+              not come back), bit-identical
+  journal     torn write-ahead-journal tail -> Engine.recover truncates
+              to the last good record and replays the unfinished
+              requests bit-identically (warm restart)
 
 The script exits non-zero on any mismatch, so CI runs it as the chaos
 step of the fault matrix.
 
   PYTHONPATH=src python examples/chaos_matrix.py
 """
+import os
+
+# the device_loss scenario reshards a 4-device mesh; force the host
+# platform to expose 4 devices BEFORE jax initialises
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import tempfile
 import time
 
 import numpy as np
 
 from repro.core import corpus, stemmer
 from repro.index import builder
-from repro.serve import (DictStore, Engine, FaultInjector, FaultPlan,
-                         FaultSpec, InjectedFault, StemmerWorkload)
+from repro.serve import (DegradationPolicy, DictStore, Engine,
+                         FaultInjector, FaultPlan, FaultSpec,
+                         InjectedFault, Journal, StemmerWorkload)
 
 N_REQ = 8
 WORDS_PER_REQ = 32
@@ -106,8 +123,6 @@ def main():
     print("CHAOS_PUBLISH_OK")
 
     # --- site checkpoint: torn partial rewritten, index identical -----
-    import tempfile
-
     table = corpus.build_token_table(forms_per_root=6)
 
     def stream():
@@ -147,6 +162,74 @@ def main():
         assert req.failure is None
         np.testing.assert_array_equal(req.roots, baseline[i])
     print("CHAOS_QUARANTINE_OK")
+
+    # unknown sites are rejected at PLAN construction, not at fire time
+    try:
+        FaultSpec("gpu")
+        raise AssertionError("unknown fault site accepted")
+    except ValueError:
+        pass
+
+    # --- site stall: wedged persistent ring, watchdog salvage ---------
+    inj = FaultInjector(FaultPlan(
+        specs=(FaultSpec("stall", at=0, retired_tiles=2),), seed=SEED))
+    eng = Engine(StemmerWorkload(DictStore(arrays), block_b=32,
+                                 max_inflight=1, persistent=True,
+                                 megabatch_tiles=4, watchdog_s=0.05,
+                                 injector=inj))
+    rids = [eng.submit(enc[i * WORDS_PER_REQ:(i + 1) * WORDS_PER_REQ])
+            for i in range(N_REQ)]
+    assert eng.run_until_drained().drained
+    assert eng.workload.watchdog_stalls == 1
+    stalls = [e for e in eng.events() if e.kind == "watchdog_stall"]
+    assert len(stalls) == 1 and stalls[0].data["salvaged_words"] == 64
+    check_identical(eng, rids, baseline)
+    print("CHAOS_STALL_OK")
+
+    # --- site device_loss: ladder reshards onto fewer devices ---------
+    inj = FaultInjector(FaultPlan(specs=(FaultSpec("device_loss", at=0),),
+                                  seed=SEED))
+    pol = DegradationPolicy(down_after=1)
+    eng = Engine(StemmerWorkload(DictStore(arrays), block_b=32,
+                                 max_inflight=2, data_devices=4,
+                                 injector=inj), policy=pol)
+    rids = [eng.submit(enc[i * WORDS_PER_REQ:(i + 1) * WORDS_PER_REQ])
+            for i in range(N_REQ)]
+    assert eng.run_until_drained().drained
+    assert eng.workload.device_losses == 1
+    assert any(t[2] == "device_loss" and t[1].startswith("devices-")
+               for t in pol.transitions), pol.transitions
+    eng.step()               # a requested mode lands at an empty-ring tick
+    assert eng.workload.data_devices < 4      # resharded
+    check_identical(eng, rids, baseline)
+    print("CHAOS_DEVICE_LOSS_OK")
+
+    # --- site journal: torn WAL tail, warm restart bit-identical ------
+    with tempfile.TemporaryDirectory() as td:
+        jp = os.path.join(td, "wal.jsonl")
+        # tear the 9th append — the first RETIRE record (events 0..7 are
+        # the admits) — so one served request must be re-served on replay
+        inj = FaultInjector(FaultPlan(
+            specs=(FaultSpec("journal", at=N_REQ),), seed=SEED))
+        eng = Engine(StemmerWorkload(DictStore(arrays), block_b=32,
+                                     max_inflight=2),
+                     journal=Journal(jp, fsync_every=1, injector=inj))
+        rids = [eng.submit(enc[i * WORDS_PER_REQ:(i + 1) * WORDS_PER_REQ])
+                for i in range(N_REQ)]
+        for _ in range(2):
+            eng.step()                        # serve a little, then "crash"
+        done_before = {r: eng.result(r) for r in rids
+                       if eng.result(r) is not None}
+        eng2 = Engine.recover(jp, StemmerWorkload(DictStore(arrays),
+                                                  block_b=32,
+                                                  max_inflight=2))
+        assert eng2.recovery.dropped_bytes > 0     # the tear was truncated
+        assert eng2.run_until_drained().drained
+        for i, r in enumerate(rids):
+            req = done_before.get(r) or eng2.result(r)
+            assert req is not None and req.failure is None
+            np.testing.assert_array_equal(req.roots, baseline[i])
+    print("CHAOS_JOURNAL_OK")
 
 
 if __name__ == "__main__":

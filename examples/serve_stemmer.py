@@ -8,6 +8,10 @@ restart. Every served word is then verified bit-identical to
 core.stemmer.stem_batch under the dict version that served it — the
 script exits non-zero on any mismatch, so CI runs it as a smoke test.
 
+A second pass re-serves the same queue with one injected launch
+failure and reads the recovery off ``Engine.events()`` — the
+structured incident stream — instead of grepping workload counters.
+
   PYTHONPATH=src python examples/serve_stemmer.py
 """
 import time
@@ -16,7 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import corpus, stemmer
-from repro.serve import DictStore, Engine, StemmerWorkload
+from repro.serve import (DictStore, Engine, FaultInjector, FaultPlan,
+                         FaultSpec, StemmerWorkload)
 
 N_REQUESTS, WORDS_PER_REQ, BLOCK_B = 12, 40, 64
 
@@ -66,6 +71,23 @@ def main():
     assert checked == n_words
     print(f"parity ok: {checked} words bit-identical to stem_batch under "
           f"their serving dict version")
+
+    # -- faulted re-serve, observed through the structured event stream
+    inj = FaultInjector(FaultPlan(specs=(FaultSpec("dispatch", at=1),)))
+    eng2 = Engine(StemmerWorkload(DictStore(arrays), block_b=BLOCK_B,
+                                  injector=inj))
+    rids2 = [eng2.submit(enc[i * WORDS_PER_REQ:(i + 1) * WORDS_PER_REQ])
+             for i in range(N_REQUESTS)]
+    assert eng2.run_until_drained().drained
+    retries = [e for e in eng2.events() if e.kind == "retry"]
+    assert len(retries) == 1 and retries[0].data["attempt"] == 1
+    assert not any(e.kind == "failure" for e in eng2.events())
+    for rid in rids2:
+        req = eng2.result(rid)
+        want_r, _ = stemmer.stem_batch(jnp.asarray(req.words), arrays)
+        assert np.array_equal(req.roots, np.asarray(want_r))
+    print(f"fault recovery ok: retry observed via Engine.events()"
+          f" (rids {retries[0].data['rids']}), drain bit-identical")
 
 
 if __name__ == "__main__":

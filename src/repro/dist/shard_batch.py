@@ -29,6 +29,27 @@ from repro.core import stemmer as core_stemmer
 from repro.kernels import stem_fused as sf
 
 
+def device_downshift_ladder(n_dev: int) -> list[int]:
+    """Data-device counts the degradation ladder reshards through:
+    ``n_dev`` halving down to 1, descending.
+
+    Any count d <= n_dev serves bit-identically — :func:`shard_batch`
+    pads each launch to ``d * block_b`` and the per-word kernel output
+    is independent of tile packing — so mid-stream resharding (a device
+    lost from the mesh, sustained faults) only changes throughput,
+    never results. Halving keeps the rung count logarithmic and every
+    rung a divisor-friendly mesh shape.
+    """
+    if n_dev < 1:
+        raise ValueError(f"n_dev must be >= 1, got {n_dev}")
+    out, d = [], n_dev
+    while d > 1:
+        out.append(d)
+        d //= 2
+    out.append(1)
+    return out
+
+
 def mesh_axis_size(mesh, axis: str) -> int:
     """Size of ``axis`` in ``mesh`` (duck-typed via sharding.axis_sizes)."""
     from repro.dist import sharding

@@ -697,6 +697,24 @@ def _persistent_streamed_call(wp, stream, n_visits, visit_idx, version_slot,
     )(desc, visit_idx, wp, stream)
 
 
+def salvage_descriptor_rows(flags, version_slot: int, block_b: int) -> int:
+    """Host-side watchdog helper: how many leading rows of an abandoned
+    persistent launch its completion flags prove retired.
+
+    Descriptors retire in ring order (the kernel's fori_loop), so a
+    wedge leaves exactly a *prefix* of flags equal to ``1 +
+    version_slot`` — anything after the first unretired descriptor is
+    unproven even if its flag looks set (the flag write races the
+    wedge). Returns ``block_b * k`` for the longest such prefix: the
+    rows the watchdog may scatter; the rest re-dispatches down the
+    megabatch path.
+    """
+    f = np.asarray(flags)
+    good = f == 1 + version_slot
+    k = int(f.size if good.all() else np.argmin(good))
+    return k * block_b
+
+
 def dict_tile_count(roots, dict_block_r: int) -> int:
     """Tiles in the streamed `[tri | quad | bi]` stream (mirrors
     stem_match.pad_dict_tiles: every table pads to >= one full tile)."""

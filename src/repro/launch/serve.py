@@ -15,13 +15,21 @@ import numpy as np
 from repro import configs
 from repro.models import model as model_mod
 from repro.models import params as pm
-from repro.serve import (DictStore, Engine, LMDecodeWorkload,
-                         StemmerWorkload, TextAnalysisWorkload)
+from repro.serve import (DegradationPolicy, DictStore, Engine, Journal,
+                         LMDecodeWorkload, StemmerWorkload,
+                         TextAnalysisWorkload)
 
 
 def _engine_kw(args) -> dict:
-    """Engine admission-control kwargs shared by all three workloads."""
-    return dict(queue_cap=args.queue_cap or None, on_full=args.on_full)
+    """Engine admission-control + crash-safety kwargs shared by all
+    three workloads (the journal/policy flags are validated in main()
+    before any engine is constructed)."""
+    kw = dict(queue_cap=args.queue_cap or None, on_full=args.on_full)
+    if getattr(args, "journal", None):
+        kw["journal"] = Journal(args.journal)
+    if getattr(args, "degrade", "off") == "on":
+        kw["policy"] = DegradationPolicy()
+    return kw
 
 
 def _deadline_s(args) -> float | None:
@@ -30,8 +38,28 @@ def _deadline_s(args) -> float | None:
 
 def _retry_kw(args) -> dict:
     """StemmerWorkload/TextAnalysisWorkload retry kwargs (lm has none)."""
-    return {} if args.max_retries is None else dict(
+    kw = {} if args.max_retries is None else dict(
         max_retries=args.max_retries)
+    if args.watchdog_ms:
+        kw["watchdog_s"] = args.watchdog_ms / 1000.0
+    return kw
+
+
+def _report_events(eng) -> None:
+    """Structured incident stream (Engine.events): the supported way to
+    see retries, stalls, device losses and ladder transitions."""
+    events = eng.events()
+    if not events:
+        return
+    counts: dict[str, int] = {}
+    for ev in events:
+        counts[ev.kind] = counts.get(ev.kind, 0) + 1
+    print("  events: " + ", ".join(f"{k} x{n}"
+                                   for k, n in sorted(counts.items())))
+    for ev in events:
+        if ev.kind in ("degrade", "upshift"):
+            print(f"    {ev.kind}: {ev.data['from']} -> {ev.data['to']}"
+                  f" ({ev.data['reason']})")
 
 
 def _report_failures(eng, rids) -> str:
@@ -116,6 +144,7 @@ def serve_stemmer(args) -> None:
           f"megabatch {args.megabatch}"
           f"{', persistent' if args.persistent else ''}, "
           f"inflight {args.inflight}{_report_failures(eng, rids)})")
+    _report_events(eng)
     for rid in rids[:2]:
         req = eng.result(rid)
         if req.failure is None:
@@ -174,6 +203,7 @@ def serve_text(args) -> None:
           f" {eng.workload.ticks_launched} launches,"
           f" frontend {args.frontend}, megabatch {args.megabatch},"
           f" inflight {args.inflight}{_report_failures(eng, rids)})")
+    _report_events(eng)
     for rid in rids[:2]:
         req = eng.result(rid)
         if req.failure is not None:
@@ -249,6 +279,26 @@ def main():
                     help="full-queue policy: raise QueueFull, shed the"
                          " new request (FailureInfo 'shed'), or block"
                          " until a slot frees")
+    # crash safety + degraded modes (DESIGN.md §12)
+    ap.add_argument("--journal", default="", metavar="PATH",
+                    help="write-ahead request journal: every accepted"
+                         " request is durable before it is served, so a"
+                         " killed server warm-restarts via"
+                         " Engine.recover(PATH) with zero lost requests")
+    ap.add_argument("--watchdog-ms", type=float, default=0.0,
+                    help="persistent-kernel stall watchdog: a launch"
+                         " whose completion flags stop advancing for"
+                         " this long is abandoned, its retired-prefix"
+                         " salvaged and the rest re-dispatched down the"
+                         " megabatch path (requires --persistent;"
+                         " 0 = off)")
+    ap.add_argument("--degrade", choices=("on", "off"), default="off",
+                    help="graceful-degradation ladder: under sustained"
+                         " faults or queue pressure the serving mode"
+                         " downshifts persistent -> megabatch ->"
+                         " per-tile -> streamed-dict -> fewer devices,"
+                         " and upshifts when healthy (stemmer/text"
+                         " only)")
     args = ap.parse_args()
 
     if args.deadline_ms < 0:
@@ -263,6 +313,18 @@ def main():
     if args.workload == "lm" and args.max_retries is not None:
         ap.error("--max-retries applies to the stemmer/text workloads"
                  " (the LM decode loop has no launch retry path)")
+    # cross-validate the crash-safety flags BEFORE any engine exists, so
+    # an invalid combination never half-constructs serving state
+    if args.watchdog_ms < 0:
+        ap.error("--watchdog-ms must be >= 0")
+    if args.watchdog_ms and not args.persistent:
+        ap.error("--watchdog-ms guards the persistent descriptor ring;"
+                 " it requires --persistent")
+    if args.watchdog_ms and args.workload == "lm":
+        ap.error("--watchdog-ms applies to the stemmer/text workloads")
+    if args.degrade == "on" and args.workload == "lm":
+        ap.error("--degrade applies to the stemmer/text workloads (the"
+                 " LM decode loop has no mode ladder)")
 
     if args.workload == "stemmer":
         serve_stemmer(args)

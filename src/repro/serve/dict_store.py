@@ -45,6 +45,9 @@ downstream of validation.
 """
 from __future__ import annotations
 
+import hashlib
+import json
+import os
 import threading
 from dataclasses import dataclass
 
@@ -59,6 +62,10 @@ TABLES = ("tri", "quad", "bi")
 
 class DictValidationError(ValueError):
     """A publish failed phase-1 layout validation; nothing was installed."""
+
+
+class DictSnapshotError(RuntimeError):
+    """A catalog snapshot failed its content-hash verification."""
 
 
 def _validate_table(name: str, arr) -> None:
@@ -329,3 +336,86 @@ class DictStore:
         """Version number of the current dictionary."""
         with self._lock:
             return self._current.version
+
+    # -- crash safety (DESIGN.md §12) --------------------------------------
+    def snapshot(self, path) -> str:
+        """Persist the version catalog — every retained version's packed
+        tables plus the current/next counters — as one atomically
+        renamed npz; returns the catalog content hash.
+
+        The warm-restart counterpart of the request journal:
+        ``Engine.recover`` re-pins each replayed request against the
+        version it was *admitted* under, which only exists after a
+        restart if the catalog was snapshotted. Per-table sha16 hashes
+        ride in the metadata and are verified at :meth:`restore` (the
+        index checkpoints' sha discipline).
+        """
+        path = str(path)
+        with self._lock:
+            versions = dict(self._versions)
+            current = self._current.version
+            next_version = self._next_version
+        payload, shas = {}, {}
+        for v, dv in versions.items():
+            for name in TABLES:
+                key = f"v{v}_{name}"
+                a = np.ascontiguousarray(np.asarray(getattr(dv.arrays, name),
+                                                    dtype=np.int32))
+                payload[key] = a
+                shas[key] = hashlib.sha256(a.tobytes()).hexdigest()[:16]
+        meta = {"versions": sorted(versions), "current": current,
+                "next_version": next_version, "residency": self._residency,
+                "infix": self._infix, "dict_block_r": self._dict_block_r,
+                "keep_history": self._keep_history, "sha": shas}
+        meta_json = json.dumps(meta, sort_keys=True)
+        payload["__meta__"] = np.frombuffer(meta_json.encode(), np.uint8)
+        tmp = f"{path}.tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        return hashlib.sha256(meta_json.encode()).hexdigest()[:16]
+
+    @classmethod
+    def restore(cls, path, *, injector=None) -> "DictStore":
+        """Rebuild a store from :meth:`snapshot`. Every retained version
+        is re-resolved at its ORIGINAL version number (the constructor
+        path would renumber from 0, orphaning journal pins); per-table
+        content hashes are verified first, raising
+        :class:`DictSnapshotError` on any mismatch."""
+        with np.load(str(path)) as z:
+            meta = json.loads(bytes(z["__meta__"].tobytes()).decode())
+            tables = {k: np.asarray(z[k]) for k in z.files if k != "__meta__"}
+        import jax.numpy as jnp
+
+        self = cls.__new__(cls)
+        self._lock = threading.Lock()
+        self._pub_lock = threading.Lock()
+        self._residency = meta["residency"]
+        self._infix = meta["infix"]
+        self._dict_block_r = meta["dict_block_r"]
+        self._keep_history = meta["keep_history"]
+        self._versions = {}
+        self._current = None
+        self._injector = None
+        for v in meta["versions"]:
+            arrs = {}
+            for name in TABLES:
+                key = f"v{v}_{name}"
+                a = np.ascontiguousarray(tables[key].astype(np.int32))
+                got = hashlib.sha256(a.tobytes()).hexdigest()[:16]
+                if got != meta["sha"][key]:
+                    raise DictSnapshotError(
+                        f"snapshot table {key} fails its content hash"
+                        f" (want {meta['sha'][key]}, got {got})")
+                arrs[name] = jnp.asarray(a)
+            handle = core_stemmer.resolve_dict(
+                core_stemmer.RootDictArrays(**arrs),
+                residency=self._residency, infix=self._infix,
+                dict_block_r=self._dict_block_r)
+            self._versions[int(v)] = DictVersion(int(v), handle)
+        self._current = self._versions[int(meta["current"])]
+        self._next_version = int(meta["next_version"])
+        self._injector = injector
+        return self

@@ -61,7 +61,8 @@ import numpy as np
 
 from repro.core import alphabet as ab
 from repro.models import model as model_mod
-from repro.serve.faults import FailureInfo
+from repro.serve.faults import DeviceLost, FailureInfo
+from repro.serve.health import EventLog
 
 
 # ---------------------------------------------------------------------------
@@ -153,7 +154,7 @@ class Engine:
     ON_FULL = ("raise", "shed", "block")
 
     def __init__(self, workload: Workload, *, queue_cap: int | None = None,
-                 on_full: str = "raise"):
+                 on_full: str = "raise", journal=None, policy=None):
         if on_full not in self.ON_FULL:
             raise ValueError(f"unknown on_full policy {on_full!r}"
                              f" (choose from {self.ON_FULL})")
@@ -169,6 +170,17 @@ class Engine:
         self.on_full = on_full
         self.shed = 0            # requests rejected by admission control
         self._next_rid = 0
+        # crash safety + health (DESIGN.md §12): the write-ahead journal
+        # makes accepted work durable; the event log is the one stream
+        # failures / stalls / ladder transitions surface through; the
+        # degradation policy (observed each step) walks the mode ladder
+        self.journal = journal
+        self.events_log: EventLog = (getattr(workload, "events", None)
+                                     or EventLog())
+        self.policy = policy
+        if policy is not None:
+            policy.attach(workload, self.events_log)
+        self.recovery = None     # RecoveryReport when built via recover()
 
     # -- client API --------------------------------------------------------
     def _queue_full(self) -> bool:
@@ -202,14 +214,41 @@ class Engine:
             req.failure = FailureInfo(rid, "shed",
                                       detail=f"queue at cap {self.queue_cap}")
             req.done = True
-            self.finished[rid] = req
-            self.shed += 1
+            self._finish(req)           # shed work is terminal, never
+            self.shed += 1              # journaled as an admit
             return rid
+        if self.journal is not None:
+            # write-ahead: the admit is durable BEFORE the request can
+            # be served, so a crash between here and retire re-serves it
+            store = getattr(self.workload, "store", None)
+            self.journal.admit(
+                rid, payload, deadline_s=deadline_s,
+                dict_version=None if store is None else store.version,
+                opts=opts)
         self.queue.append(req)
         return rid
 
     def result(self, rid: int):
         return self.finished.get(rid)
+
+    def events(self, *, drain: bool = False) -> list:
+        """The structured event stream (failures, retries, checksum and
+        flag mismatches, watchdog stalls, device losses, ladder
+        transitions, recovery) — the supported alternative to grepping
+        workload counters."""
+        return (self.events_log.drain() if drain
+                else self.events_log.snapshot())
+
+    def _finish(self, req) -> None:
+        """Single exit into the finished table: emits the failure event
+        and the journal retire record alongside."""
+        self.finished[req.rid] = req
+        if req.failure is not None:
+            self.events_log.emit("failure", rid=req.rid,
+                                 code=req.failure.code,
+                                 detail=req.failure.detail)
+        if self.journal is not None:
+            self.journal.retire(req)
 
     @property
     def active(self) -> int:
@@ -228,18 +267,20 @@ class Engine:
                     req.failure = FailureInfo(req.rid, "deadline",
                                               detail="expired while queued")
                     req.done = True
-                    self.finished[req.rid] = req
+                    self._finish(req)
                 else:
                     still.append(req)
             self.queue = still
         expire = getattr(self.workload, "expire", None)
         if expire is not None:
             for req in expire(now):
-                self.finished[req.rid] = req
+                self._finish(req)
         while self.queue and self.workload.has_capacity():
             self.workload.admit(self.queue.pop(0))
         for req in self.workload.tick():
-            self.finished[req.rid] = req
+            self._finish(req)
+        if self.policy is not None:
+            self.policy.observe(self)
 
     def run_until_drained(self, max_ticks: int = 1000, *,
                           on_undrained: str = "raise") -> DrainReport:
@@ -269,19 +310,79 @@ class Engine:
                                           detail="undrained at max_ticks"
                                                  " (still queued)")
                 req.done = True
-                self.finished[req.rid] = req
+                self._finish(req)
                 cancelled.append(req.rid)
             self.queue = []
             cancel = getattr(self.workload, "cancel_pending", None)
             if cancel is not None:
                 for req in cancel():
-                    self.finished[req.rid] = req
+                    self._finish(req)
                     cancelled.append(req.rid)
             raise EngineUndrained(DrainReport(ticks=ticks, drained=False,
                                               pending=pending,
                                               cancelled=cancelled))
         return DrainReport(ticks=ticks, drained=not pending,
                            pending=pending)
+
+    # -- warm restart ------------------------------------------------------
+    @classmethod
+    def recover(cls, journal_path, workload: Workload, *,
+                queue_cap: int | None = None, on_full: str = "raise",
+                policy=None, fsync_every: int = 32) -> "Engine":
+        """Rebuild an engine from a write-ahead journal after a crash.
+
+        Reads the journal (truncating any torn tail), re-queues every
+        admit with no matching retire — in rid order, through the normal
+        FIFO path, so replay coalesces and serves deterministically —
+        and reopens the journal for appending. Replayed requests
+        re-verify their payload digest, re-arm their original deadline
+        window, and re-pin the dict version they were admitted under
+        (``workload.store`` must still hold it: pair the journal with
+        ``DictStore.snapshot``/``restore``). Requests already retired
+        are NOT re-served; their responses live in the journal's retire
+        digests. The combined (pre-crash finished + recovered) outputs
+        are bit-identical to an uninterrupted run.
+        """
+        from repro.serve import journal as journal_mod
+
+        records, dropped = journal_mod.Journal.read(journal_path)
+        injector = getattr(workload, "injector", None)
+        jr = journal_mod.Journal(journal_path, fsync_every=fsync_every,
+                                 injector=injector)
+        eng = cls(workload, queue_cap=queue_cap, on_full=on_full,
+                  journal=jr, policy=policy)
+        retired = {int(r["rid"]) for r in records
+                   if r.get("kind") == "retire"}
+        max_rid, replayed = -1, []
+        for rec in records:
+            if rec.get("kind") == "retire":
+                max_rid = max(max_rid, int(rec["rid"]))
+                continue
+            rid = int(rec["rid"])
+            max_rid = max(max_rid, rid)
+            if rid in retired:
+                continue
+            payload = journal_mod.decode_payload(rec["payload"])
+            if journal_mod.payload_digest(payload) != rec["digest"]:
+                raise journal_mod.JournalError(
+                    f"admit record for rid {rid} fails its payload digest")
+            req = workload.make_request(rid, payload,
+                                        **(rec.get("opts") or {}))
+            if rec.get("deadline_s") is not None:
+                req.deadline = time.monotonic() + float(rec["deadline_s"])
+            dv = rec.get("dict_version")
+            if dv is not None and hasattr(req, "pin_version"):
+                req.pin_version = int(dv)
+            eng.queue.append(req)
+            replayed.append(rid)
+        eng._next_rid = max_rid + 1
+        eng.recovery = journal_mod.RecoveryReport(
+            replayed=replayed, already_retired=len(retired),
+            dropped_bytes=dropped)
+        eng.events_log.emit("recovered", replayed=len(replayed),
+                            already_retired=len(retired),
+                            dropped_bytes=dropped)
+        return eng
 
 
 # ---------------------------------------------------------------------------
@@ -453,6 +554,9 @@ class StemRequest:
     done: bool = False
     deadline: float | None = None       # absolute time.monotonic() bound
     failure: FailureInfo | None = None  # set iff terminally failed
+    pin_version: int | None = None      # recovery: serve under exactly this
+    # dict version (the one the request was admitted under, per its
+    # journal record) instead of whatever is current at dispatch
 
     @property
     def n_words(self) -> int:
@@ -482,7 +586,9 @@ class InflightTile:
     flags_dev: object = None   # persistent mode: int32 [n_tiles] completion
     checksums_dev: object = None  # int32 [n_tiles] device-computed per-tile
     retries: int = 0           # retry generation of this dispatch
-    t_dispatch: float = 0.0    # launch_timeout_s accounting
+    t_dispatch: float = 0.0    # launch_timeout_s / watchdog_s accounting
+    stalled: object = None     # injected wedge spec: never reads as ready
+    via_megabatch: bool = False  # watchdog fallback: bypassed persistent
 
     def is_ready(self) -> bool:
         """True once the device arrays can be fetched without blocking.
@@ -514,6 +620,9 @@ class RetryGroup:
     segments: list             # [(req, req_start, count)]
     retries: int = 0
     not_before: float = 0.0
+    via_megabatch: bool = False  # force the megabatch path even when the
+    # workload is persistent — the watchdog's descriptor re-dispatch
+    # route (a wedged descriptor ring must not be relaunched into)
 
 
 class StemmerWorkload:
@@ -582,6 +691,7 @@ class StemmerWorkload:
                  max_requests: int | None = None,
                  max_retries: int = 2, retry_backoff_s: float = 0.0,
                  launch_timeout_s: float | None = None,
+                 watchdog_s: float | None = None,
                  checksum: bool = True, injector=None,
                  interpret: bool | None = None):
         if max_inflight < 1:
@@ -604,6 +714,13 @@ class StemmerWorkload:
         if launch_timeout_s is not None and launch_timeout_s <= 0:
             raise ValueError(
                 f"launch_timeout_s must be > 0, got {launch_timeout_s}")
+        if watchdog_s is not None and watchdog_s <= 0:
+            raise ValueError(f"watchdog_s must be > 0, got {watchdog_s}")
+        if watchdog_s is not None and not persistent:
+            raise ValueError(
+                "watchdog_s guards the persistent descriptor ring"
+                " (completion-flag stalls); non-persistent launches use"
+                " launch_timeout_s")
         self.store = store
         self.block_b = block_b
         self.infix = infix
@@ -619,6 +736,7 @@ class StemmerWorkload:
         self.max_retries = max_retries
         self.retry_backoff_s = retry_backoff_s
         self.launch_timeout_s = launch_timeout_s
+        self.watchdog_s = watchdog_s
         self.checksum = checksum
         self.injector = injector
         self.interpret = interpret
@@ -634,6 +752,17 @@ class StemmerWorkload:
         self.quarantined = 0      # requests isolated with FailureInfo
         self.timeouts = 0         # launches abandoned at launch_timeout_s
         self.checksum_failures = 0  # retires discarded on checksum mismatch
+        self.watchdog_stalls = 0  # persistent launches abandoned as wedged
+        self.device_losses = 0    # sharded launches failed with DeviceLost
+        # structured incident stream; the Engine adopts this log so
+        # workload- and engine-level events interleave in one place
+        self.events = EventLog()
+        # degradation-ladder state: a requested ServingMode lands at the
+        # next tick whose ring is empty; "streamed" overrides resident
+        # published handles (degraded re-resolutions cached per version)
+        self.residency_override: str | None = None
+        self._pending_mode = None
+        self._degraded: dict = {}
         self._mesh = None
         if data_devices > 1:
             from repro.launch import mesh as mesh_mod
@@ -678,6 +807,7 @@ class StemmerWorkload:
         return [r.rid for r in self.inflight]
 
     def tick(self) -> list[StemRequest]:
+        self._apply_pending_mode()
         retired = self._retire_ready()
         dispatched = self._fill_ring()
         if not retired and not dispatched and self.ring:
@@ -688,13 +818,13 @@ class StemmerWorkload:
             if self._has_undispatched():
                 # saturated: every slot outstanding, none ready — wait
                 # for the oldest, then refill its slot
-                self._retire(self.ring.pop(0))
+                self._retire_blocking(self.ring.pop(0))
                 self._fill_ring()
             else:
                 # draining: nothing left to launch, so overlap buys
                 # nothing — hard-sync the whole ring
                 while self.ring:
-                    self._retire(self.ring.pop(0))
+                    self._retire_blocking(self.ring.pop(0))
         finished, still = [], []
         for req in self.inflight:
             if req.failure is not None:     # quarantined mid-flight
@@ -747,6 +877,79 @@ class StemmerWorkload:
         self.inflight = []
         return out
 
+    # -- degradation ladder (serve/health.py) ------------------------------
+    def request_mode(self, mode) -> None:
+        """Ask for a ladder transition: applied at the next tick whose
+        ring is empty (in-flight launches keep the geometry they
+        dispatched with; resharding mid-launch is never attempted)."""
+        self._pending_mode = mode
+
+    def _apply_pending_mode(self) -> None:
+        m = self._pending_mode
+        if m is None or self.ring:
+            return
+        self._pending_mode = None
+        geom_changed = (m.data_devices != self.data_devices
+                        or m.megabatch_tiles != self.megabatch_tiles)
+        self.persistent = m.persistent
+        self.megabatch_tiles = m.megabatch_tiles
+        self.residency_override = m.residency
+        if m.data_devices != self.data_devices:
+            self.data_devices = m.data_devices
+            if m.data_devices > 1:
+                from repro.launch import mesh as mesh_mod
+
+                self._mesh = mesh_mod.make_data_mesh(m.data_devices)
+            else:
+                self._mesh = None
+        if geom_changed:
+            self.super_b = self.block_b * self.data_devices
+            self.launch_b = self.super_b * self.megabatch_tiles
+            self._staging = [np.zeros((self.launch_b, ab.MAXLEN), np.int32)
+                             for _ in range(self.max_inflight)]
+            self._free_slots = list(range(self.max_inflight))
+            self._split_requeue(self.launch_b)
+
+    def _split_requeue(self, cap: int) -> None:
+        """Re-chunk waiting retry groups so none exceeds the (possibly
+        shrunken) launch width after a ladder transition."""
+        out = []
+        for grp in self._requeue:
+            cur, fill = [], 0
+            for req, r0, take in grp.segments:
+                while take > 0:
+                    t = min(take, cap - fill)
+                    if t == 0:
+                        out.append(RetryGroup(cur, retries=grp.retries,
+                                              not_before=grp.not_before,
+                                              via_megabatch=grp.via_megabatch))
+                        cur, fill = [], 0
+                        continue
+                    cur.append((req, r0, t))
+                    fill += t
+                    r0 += t
+                    take -= t
+            if cur:
+                out.append(RetryGroup(cur, retries=grp.retries,
+                                      not_before=grp.not_before,
+                                      via_megabatch=grp.via_megabatch))
+        self._requeue = out
+
+    def _degraded_handle(self, dv):
+        """This version's arrays re-resolved at the ladder's residency
+        override (e.g. resident -> streamed), cached per (version,
+        override) so repeated launches reuse one handle/trace."""
+        key = (dv.version, self.residency_override)
+        h = self._degraded.get(key)
+        if h is None:
+            from repro.core import stemmer as core_stemmer
+
+            h = core_stemmer.resolve_dict(
+                dv.arrays, residency=self.residency_override,
+                infix=self.infix, dict_block_r=self.dict_block_r)
+            self._degraded[key] = h
+        return h
+
     # -- dispatch side -----------------------------------------------------
     def _has_undispatched(self) -> bool:
         return bool(self._requeue) or any(
@@ -761,8 +964,13 @@ class StemmerWorkload:
         launch keeps its words through the RetryGroup rather than
         releasing them for re-coalescing (which could double-dispatch
         against an in-flight retry).
+
+        A launch acquires ONE dict version, so requests with different
+        ``pin_version``s (recovery pins the admit-time version; fresh
+        requests pin nothing) never share a group — coalescing breaks
+        at the first pin mismatch and picks the rest up next launch.
         """
-        segments, fill = [], 0
+        segments, fill, pin = [], 0, None
         for req in self.inflight:
             if req.failure is not None:
                 continue
@@ -770,6 +978,10 @@ class StemmerWorkload:
                 break
             take = min(req.n_words - req.dispatched, self.launch_b - fill)
             if take > 0:
+                if not segments:
+                    pin = req.pin_version
+                elif req.pin_version != pin:
+                    break
                 segments.append((req, req.dispatched, take))
                 req.dispatched += take
                 fill += take
@@ -843,6 +1055,9 @@ class StemmerWorkload:
             raise exc
         grp.retries += 1
         self.retries_total += 1
+        self.events.emit("retry", attempt=grp.retries,
+                         rids=[req.rid for req, _r0, _t in grp.segments],
+                         detail=str(exc))
         if grp.retries > self.max_retries:
             if len(grp.segments) > 1:
                 # the whole group keeps failing: split it so a poison
@@ -850,8 +1065,11 @@ class StemmerWorkload:
                 # the healthy halves complete
                 mid = len(grp.segments) // 2
                 self.bisections += 1
-                self._requeue.append(RetryGroup(grp.segments[:mid]))
-                self._requeue.append(RetryGroup(grp.segments[mid:]))
+                self.events.emit("bisect", segments=len(grp.segments))
+                self._requeue.append(RetryGroup(
+                    grp.segments[:mid], via_megabatch=grp.via_megabatch))
+                self._requeue.append(RetryGroup(
+                    grp.segments[mid:], via_megabatch=grp.via_megabatch))
             else:
                 (req, _r0, _take), = grp.segments
                 req.failure = FailureInfo(
@@ -873,9 +1091,35 @@ class StemmerWorkload:
             try:
                 self.injector.on_dispatch(
                     rids=[req.rid for req, _r0, _take in grp.segments])
+                if self._mesh is not None:
+                    self.injector.on_device_loss()
             except Exception as e:
+                if isinstance(e, DeviceLost):
+                    self.device_losses += 1
+                    self.events.emit("device_loss",
+                                     data_devices=self.data_devices,
+                                     detail=str(e))
                 return self._launch_failed(grp, e)
-        dv = self.store.acquire()       # one version per megabatch launch
+        # one version per megabatch launch: recovered requests pin the
+        # version they were admitted under, everything else serves the
+        # current one (_coalesce never mixes pins in one group)
+        pin = grp.segments[0][0].pin_version
+        if pin is None:
+            dv = self.store.acquire()
+        else:
+            try:
+                dv = self.store.get(pin)
+            except KeyError as e:
+                # the pinned lexicon is gone from the catalog (snapshot
+                # not restored / history dropped): fail loudly into the
+                # retry machinery rather than silently serving another
+                # version — auditability beats availability here
+                return self._launch_failed(grp, e)
+        handle = dv.handle
+        if (self.residency_override is not None
+                and handle.residency != self.residency_override):
+            handle = self._degraded_handle(dv)
+        use_persistent = self.persistent and not grp.via_megabatch
         slot = self._free_slots.pop()
         tile = self._staging[slot]
         placed, fill = [], 0
@@ -893,15 +1137,15 @@ class StemmerWorkload:
         try:
             if self._mesh is not None:
                 out = ops.extract_roots_sharded(
-                    jnp.asarray(tile[:rows]), dv.handle, self._mesh,
+                    jnp.asarray(tile[:rows]), handle, self._mesh,
                     infix=self.infix, match=self.match, block_b=self.block_b,
                     dict_block_r=self.dict_block_r,
                     num_buffers=self.num_buffers, skip_index=self.skip_index,
                     with_checksum=cs, interpret=self.interpret)
                 roots, sources = out[0], out[1]
-            elif self.persistent:
+            elif use_persistent:
                 out = ops.extract_roots_persistent(
-                    jnp.asarray(tile[:rows]), dv.handle, infix=self.infix,
+                    jnp.asarray(tile[:rows]), handle, infix=self.infix,
                     match=self.match, block_b=self.block_b,
                     dict_block_r=self.dict_block_r,
                     num_buffers=self.num_buffers, skip_index=self.skip_index,
@@ -910,7 +1154,7 @@ class StemmerWorkload:
                 roots, sources, flags = out[0], out[1], out[2]
             else:
                 out = ops.extract_roots_fused(
-                    jnp.asarray(tile[:rows]), dv.handle, infix=self.infix,
+                    jnp.asarray(tile[:rows]), handle, infix=self.infix,
                     match=self.match, block_b=self.block_b,
                     dict_block_r=self.dict_block_r,
                     num_buffers=self.num_buffers, skip_index=self.skip_index,
@@ -929,7 +1173,12 @@ class StemmerWorkload:
         entry = InflightTile(placed, dv.version, roots, sources, slot,
                              flags, checksums_dev=checksums,
                              retries=grp.retries,
-                             t_dispatch=time.monotonic())
+                             t_dispatch=time.monotonic(),
+                             via_megabatch=grp.via_megabatch)
+        if flags is not None and self.injector is not None:
+            # a wedge is observable only through the completion flags,
+            # so the stall site covers persistent launches alone
+            entry.stalled = self.injector.on_stall()
         try:                            # start D2H early; retire just reads
             roots.copy_to_host_async()
             sources.copy_to_host_async()
@@ -946,22 +1195,31 @@ class StemmerWorkload:
     # -- retire side -------------------------------------------------------
     def _retire_ready(self) -> int:
         """Retire every in-flight launch whose results are ready (and
-        abandon any past ``launch_timeout_s``), oldest first, without
-        blocking; returns the number processed."""
+        abandon any past ``watchdog_s`` / ``launch_timeout_s``), oldest
+        first, without blocking; returns the number processed."""
         still, n = [], 0
         now = time.monotonic()
         for entry in self.ring:
-            if entry.is_ready():
+            stalled = entry.stalled is not None
+            if not stalled and entry.is_ready():
                 self._retire(entry)
                 n += 1
-            elif (self.launch_timeout_s is not None
+            elif (self.watchdog_s is not None
+                  and entry.flags_dev is not None
+                  and now - entry.t_dispatch > self.watchdog_s):
+                # persistent launch wedged: salvage the retired prefix,
+                # re-dispatch the rest down the megabatch path
+                self._watchdog_abandon(entry)
+                n += 1
+            elif (not stalled and self.launch_timeout_s is not None
                   and now - entry.t_dispatch > self.launch_timeout_s):
                 # abandon the launch: drop the device refs, free the
                 # slot, and re-dispatch its words through the retry path
                 self.timeouts += 1
                 self._free_slots.append(entry.slot)
                 grp = RetryGroup([(req, r0, take) for req, r0, _t0, take
-                                  in entry.segments], retries=entry.retries)
+                                  in entry.segments], retries=entry.retries,
+                                 via_megabatch=entry.via_megabatch)
                 self._launch_failed(grp, TimeoutError(
                     f"launch exceeded launch_timeout_s="
                     f"{self.launch_timeout_s}"))
@@ -970,6 +1228,83 @@ class StemmerWorkload:
                 still.append(entry)
         self.ring = still
         return n
+
+    def _retire_blocking(self, entry: InflightTile) -> None:
+        """Blocking drain of one launch. A launch marked wedged (an
+        injected stall) must NOT be read — a real wedge never completes,
+        and reading would block forever — so wait out the watchdog
+        window and abandon it instead."""
+        if entry.stalled is not None and self.watchdog_s is not None:
+            wait = self.watchdog_s - (time.monotonic() - entry.t_dispatch)
+            if wait > 0:
+                time.sleep(wait)
+            self._watchdog_abandon(entry)
+        else:
+            self._retire(entry)
+
+    def _watchdog_abandon(self, entry: InflightTile) -> None:
+        """Abandon a wedged persistent launch (DESIGN.md §12).
+
+        Descriptors retire in ring order, so a wedge leaves a *prefix*
+        of completion flags reading done: salvage that prefix (checksum-
+        verified per tile), scatter its words, and re-dispatch the rest
+        as a ``via_megabatch`` RetryGroup — never back into the wedged
+        descriptor ring. No retry is charged: the stall is the launch's
+        fault, not the group's, so zero requests are lost even at
+        max_retries=0.
+        """
+        from repro.kernels import ops, stem_fused
+
+        self.watchdog_stalls += 1
+        self._free_slots.append(entry.slot)
+        rows_ok = 0
+        spec = entry.stalled
+        if spec is not None:
+            # injected wedge: the kernel actually completed (interpret
+            # mode cannot truly hang), so synthesize the flag state a
+            # real wedge would leave — the first `retired_tiles`
+            # descriptors done, the rest untouched — then salvage
+            flags = np.asarray(entry.flags_dev).copy()
+            flags[min(spec.retired_tiles, flags.size):] = 0
+            rows_ok = stem_fused.salvage_descriptor_rows(
+                flags, entry.version, self.block_b)
+        # a REAL wedge's arrays live in a launch that never completes;
+        # reading them would block forever, so nothing is salvaged and
+        # every word re-dispatches
+        roots = sources = None
+        if rows_ok > 0:
+            roots = np.asarray(entry.roots_dev)[:rows_ok]
+            sources = np.asarray(entry.sources_dev)[:rows_ok]
+            if entry.checksums_dev is not None:
+                want = np.asarray(
+                    entry.checksums_dev)[:rows_ok // self.block_b]
+                got = ops.tile_checksum_host(roots, sources,
+                                             block_b=self.block_b)
+                bad = np.flatnonzero(got != want)
+                if bad.size:       # trust only the clean flag+sum prefix
+                    rows_ok = int(bad[0]) * self.block_b
+        salvaged = redispatched = 0
+        redo = []
+        for req, r0, t0, take in entry.segments:
+            if req.failure is not None:   # expired/cancelled mid-flight
+                continue
+            good = max(0, min(take, rows_ok - t0))
+            if good > 0:
+                req.roots[r0:r0 + good] = roots[t0:t0 + good]
+                req.sources[r0:r0 + good] = sources[t0:t0 + good]
+                req.dict_versions[r0:r0 + good] = entry.version
+                req.served += good
+                salvaged += good
+            if take > good:
+                redo.append((req, r0 + good, take - good))
+                redispatched += take - good
+        if redo:
+            self._requeue.append(RetryGroup(redo, retries=entry.retries,
+                                            via_megabatch=True))
+        self.events.emit("watchdog_stall", injected=spec is not None,
+                         salvaged_words=salvaged,
+                         redispatched_words=redispatched,
+                         version=entry.version)
 
     def _retire(self, entry: InflightTile) -> bool:
         """Scatter one launch's results back (blocks if not yet ready).
@@ -1006,8 +1341,11 @@ class StemmerWorkload:
                 if self.max_retries == 0:
                     raise err
                 self.checksum_failures += 1
+                self.events.emit("checksum_failure", tiles=bad,
+                                 rids=[req.rid for req, *_ in entry.segments])
                 grp = RetryGroup([(req, r0, take) for req, r0, _t0, take
-                                  in entry.segments], retries=entry.retries)
+                                  in entry.segments], retries=entry.retries,
+                                 via_megabatch=entry.via_megabatch)
                 self._launch_failed(grp, err)
                 return False
         for req, r0, t0, take in entry.segments:

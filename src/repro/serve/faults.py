@@ -17,6 +17,19 @@ builder claim to tolerate is drivable from here, deterministically:
   site ``checkpoint`` tear (truncate) the Nth index-checkpoint file as
                       it is written, before the builder's readback
                       verification.
+  site ``stall``      wedge the Nth *persistent* launch: the ring treats
+                      it as never-ready until the watchdog abandons it
+                      and re-dispatches the unretired descriptors down
+                      the megabatch path. ``retired_tiles`` on the spec
+                      says how many leading descriptors "completed"
+                      before the wedge (their results are salvaged).
+  site ``device_loss``raise :class:`DeviceLost` at the Nth *sharded*
+                      launch — the deterministic stand-in for losing a
+                      device out of the ``("data",)`` mesh; the
+                      degradation ladder reshards onto fewer devices.
+  site ``journal``    tear the Nth write-ahead journal append in half —
+                      the torn tail a crash mid-write leaves, which
+                      recovery must truncate.
 
 A :class:`FaultPlan` is a seeded, ordered tuple of :class:`FaultSpec`s
 plus an optional poison set: any dispatch whose request ids intersect
@@ -37,7 +50,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-SITES = ("dispatch", "retire", "publish", "checkpoint")
+SITES = ("dispatch", "retire", "publish", "checkpoint", "stall",
+         "device_loss", "journal")
 
 # legal fault kinds per site (first entry is the default for the site)
 KINDS = {
@@ -45,11 +59,18 @@ KINDS = {
     "retire": ("corrupt",),
     "publish": ("reject",),
     "checkpoint": ("tear",),
+    "stall": ("wedge",),
+    "device_loss": ("lost",),
+    "journal": ("tear",),
 }
 
 
 class InjectedFault(RuntimeError):
     """Raised by the injector at a faulted event (and nowhere else)."""
+
+
+class DeviceLost(InjectedFault):
+    """A sharded launch lost a device of its mesh (site ``device_loss``)."""
 
 
 @dataclass(frozen=True)
@@ -83,6 +104,7 @@ class FaultSpec:
     at: int = 0
     count: int = 1
     delay_s: float = 0.02     # kind="delay" only
+    retired_tiles: int = 0    # kind="wedge" only: descriptors done pre-wedge
 
     def __post_init__(self):
         if self.site not in SITES:
@@ -95,6 +117,9 @@ class FaultSpec:
                              f" {KINDS[self.site]}, not {kind!r}")
         if self.at < 0 or self.count < 1:
             raise ValueError("need at >= 0 and count >= 1")
+        if self.retired_tiles < 0:
+            raise ValueError(
+                f"retired_tiles must be >= 0, got {self.retired_tiles}")
 
     def covers(self, event: int) -> bool:
         return self.at <= event < self.at + self.count
@@ -116,7 +141,19 @@ class FaultPlan:
     poison_rids: frozenset = field(default_factory=frozenset)
 
     def __post_init__(self):
-        object.__setattr__(self, "specs", tuple(self.specs))
+        specs = tuple(self.specs)
+        for s in specs:
+            # a duck-typed tuple/dict (or a spec whose site dodged
+            # FaultSpec validation) would be carried but never fire —
+            # a chaos plan that silently tests nothing. Reject it here.
+            if not isinstance(s, FaultSpec):
+                raise TypeError(
+                    f"FaultPlan specs must be FaultSpec instances, got"
+                    f" {type(s).__name__}: {s!r}")
+            if s.site not in SITES:
+                raise ValueError(f"unknown fault site {s.site!r}"
+                                 f" (choose from {SITES})")
+        object.__setattr__(self, "specs", specs)
         object.__setattr__(self, "poison_rids",
                            frozenset(int(r) for r in self.poison_rids))
 
@@ -193,3 +230,30 @@ class FaultInjector:
         size = os.path.getsize(path)
         with open(path, "r+b") as f:
             f.truncate(max(1, size // 2))
+
+    def on_stall(self) -> FaultSpec | None:
+        """Called once per *persistent* launch, after it dispatches.
+        Returns the covering wedge spec (the serving ring then treats
+        the launch as never-ready until the watchdog abandons it;
+        ``spec.retired_tiles`` leading descriptors count as completed
+        before the wedge) or None."""
+        hits = self._step("stall")
+        return hits[0] if hits else None
+
+    def on_device_loss(self) -> None:
+        """Called once per *sharded* launch, before it runs. Raises
+        :class:`DeviceLost` at a faulted event — the degradation
+        ladder's cue to reshard onto fewer data devices."""
+        ev = self.events["device_loss"]
+        if self._step("device_loss"):
+            raise DeviceLost(f"injected device loss (event {ev})")
+
+    def on_journal(self, path: str, nbytes: int = 0) -> None:
+        """Called after each journal append with the appended record's
+        byte length; tearing truncates that record in half — the torn
+        tail a crash mid-write leaves for recovery to drop."""
+        if not self._step("journal"):
+            return
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(max(0, size - max(1, nbytes // 2)))

@@ -19,6 +19,15 @@ stemmer launch: word counts are data-dependent, so the ring's fixed
 [launch_b, 16] staging contract — the thing that keeps one jit trace —
 needs the counts on the host anyway. The fully fused device-side chain
 exists as ``ops.extract_roots_text`` for the batch path.
+
+Crash safety (DESIGN.md §12) comes for free through the same
+inheritance: the write-ahead journal stores a text submission as its
+raw document list (the ``strs`` payload codec), so ``Engine.recover``
+replays the *text*, re-running normalisation + segmentation through
+``make_request`` — the front end is deterministic, so the recovered
+word rows, spans and roots are bit-identical; ``pin_version`` (a
+StemRequest field) re-pins the admitted lexicon exactly as on the
+word-tile path.
 """
 from __future__ import annotations
 

@@ -3,8 +3,10 @@ the main pytest session must keep the default single device).
 
 Covers dist.shard_batch parity (full and ragged super-tiles) against
 stem_batch / the single-device megakernel, StemmerWorkload
-``data_devices=4`` serving through the dispatch/retire ring, and a
-dictionary hot swap landing while sharded super-tiles are in flight.
+``data_devices=4`` serving through the dispatch/retire ring, a
+dictionary hot swap landing while sharded super-tiles are in flight,
+a journaled 4-device kill/warm-restart, and an injected device loss
+downshifting the degradation ladder onto a smaller mesh.
 CI runs this file as its forced-4-device step.
 """
 import os
@@ -175,6 +177,51 @@ SCRIPT = textwrap.dedent("""
     np.testing.assert_array_equal(got_s, np.asarray(want_s))
     assert all(eng.result(r).failure is None for r in rids)
     print("SHARD_RETRY_OK")
+
+    # --- 4-device warm restart: a journaled sharded engine killed after
+    # one super-tile tick recovers from the WAL and the merged
+    # (pre-crash + replayed) outputs are bit-identical -----------------
+    import tempfile
+    from repro.serve import DegradationPolicy, Journal
+
+    jp = os.path.join(tempfile.mkdtemp(), "wal.jsonl")
+    eng = Engine(StemmerWorkload(DictStore(arrays), block_b=16,
+                                 data_devices=4, max_inflight=1),
+                 journal=Journal(jp, fsync_every=1))
+    rids = [eng.submit(enc[i * 32:(i + 1) * 32]) for i in range(6)]
+    eng.step()                       # one sharded tick, then "crash"
+    done = {r: eng.result(r) for r in rids if eng.result(r) is not None}
+    eng2 = Engine.recover(jp, StemmerWorkload(DictStore(arrays),
+                                              block_b=16, data_devices=4,
+                                              max_inflight=1))
+    assert eng2.run_until_drained().drained
+    assert set(eng2.recovery.replayed) == {r for r in rids
+                                           if r not in done}
+    merged = np.concatenate([(done.get(r) or eng2.result(r)).roots
+                             for r in rids])
+    want_r, _ = stemmer.stem_batch(jnp.asarray(enc[:192]), arrays)
+    np.testing.assert_array_equal(merged, np.asarray(want_r))
+    print("SHARD_RECOVER_OK")
+
+    # --- device loss under the ladder: an injected DeviceLost on the
+    # first sharded launch downshifts to fewer data devices (capped —
+    # a lost device does not come back) and the drain, re-served on the
+    # smaller mesh, stays bit-identical --------------------------------
+    inj = FaultInjector(FaultPlan(specs=(FaultSpec("device_loss", at=0),)))
+    pol = DegradationPolicy(down_after=1)
+    eng = Engine(StemmerWorkload(DictStore(arrays), block_b=16,
+                                 data_devices=4, max_inflight=1,
+                                 injector=inj), policy=pol)
+    rids = [eng.submit(enc[i * 32:(i + 1) * 32]) for i in range(6)]
+    assert eng.run_until_drained().drained
+    eng.step()                       # a requested mode lands at an
+    assert eng.workload.device_losses == 1      # empty-ring tick
+    assert any(t[2] == "device_loss" for t in pol.transitions)
+    assert eng.workload.data_devices < 4
+    got_r = np.concatenate([eng.result(r).roots for r in rids])
+    np.testing.assert_array_equal(got_r, np.asarray(want_r))
+    assert all(eng.result(r).failure is None for r in rids)
+    print("SHARD_DEVICE_LOSS_OK")
 """)
 
 
@@ -187,7 +234,8 @@ def test_sharded_serve_four_devices():
     for marker in ("SHARD_BATCH_PARITY_OK", "SHARD_PIPELINE_KNOBS_OK",
                    "SHARD_SERVE_PARITY_OK", "SHARD_SWAP_OK",
                    "SHARD_MEGABATCH_OK", "TEXT_SHARD_OK",
-                   "SHARD_RETRY_OK"):
+                   "SHARD_RETRY_OK", "SHARD_RECOVER_OK",
+                   "SHARD_DEVICE_LOSS_OK"):
         assert marker in proc.stdout, proc.stderr[-2000:]
 
 
